@@ -1,0 +1,33 @@
+"""Paper Fig 9/10 — execution time vs support, FLEXIS (λ sweep) vs the
+MNI (GraMi-like) and fractional (T-FSM-like) baselines, same runtime."""
+from __future__ import annotations
+
+from .common import BENCH_DATASETS, emit, run_mine
+
+SUPPORTS = (6, 8, 12)
+VARIANTS = [
+    ("flexis_0.4", dict(metric="mis", lam=0.4, generation="merge")),
+    ("flexis_1.0", dict(metric="mis", lam=1.0, generation="merge")),
+    ("mni_edge_ext(GraMi-like)", dict(metric="mni", generation="edge_ext")),
+    ("frac_edge_ext(T-FSM-like)", dict(metric="frac", generation="edge_ext")),
+]
+
+
+def main() -> None:
+    rows = []
+    for ds in BENCH_DATASETS:
+        for sigma in SUPPORTS:
+            for name, kw in VARIANTS:
+                res = run_mine(ds, sigma=sigma, **kw)
+                rows.append({
+                    "name": f"exec_time/{ds}/s{sigma}/{name}",
+                    "us_per_call": round(res.elapsed_s * 1e6, 1),
+                    "derived": len(res.frequent),
+                    "searched": res.searched,
+                    "timed_out": res.timed_out,
+                })
+    emit(rows, ["name", "us_per_call", "derived", "searched", "timed_out"])
+
+
+if __name__ == "__main__":
+    main()

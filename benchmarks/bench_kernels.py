@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + jnp-path timing).
+
+Wall-clock on this CPU container times the *jnp oracle paths* (the
+production CPU fallbacks); the Pallas kernels themselves are TPU-targeted
+and validated for correctness in interpret mode (see tests/kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        out = out[0] if isinstance(out, tuple) else out
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # chunked attention (flash oracle)
+    from repro.models.attention import AttentionConfig, _attn_chunked
+
+    B, S, H, KV, hd = 1, 1024, 8, 4, 64
+    cfg = AttentionConfig(d_model=H * hd, n_heads=H, n_kv_heads=KV, head_dim=hd)
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: _attn_chunked(q, k, v, cfg, 256, 256))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * hd / 2
+    rows.append({"name": f"kernel/attn_chunked/B{B}S{S}H{H}",
+                 "us_per_call": round(us, 1),
+                 "derived": round(flops / (us * 1e-6) / 1e9, 2)})  # GFLOP/s
+
+    # mIS greedy scan (production path)
+    from repro.core.mis import bitmap_init, mis_greedy_update
+
+    n, cap, kk = 100_000, 8192, 4
+    emb = np.stack([rng.choice(n, kk, replace=False) for _ in range(cap)]).astype(np.int32)
+    bm = bitmap_init(n)
+    g = jax.jit(lambda bm, e: mis_greedy_update(bm, jnp.int32(0), e,
+                                                jnp.int32(cap),
+                                                jnp.int32(10**9), kk))
+    us = _time(g, bm, jnp.asarray(emb))
+    rows.append({"name": f"kernel/mis_greedy/cap{cap}k{kk}",
+                 "us_per_call": round(us, 1),
+                 "derived": round(cap / (us * 1e-6) / 1e6, 3)})  # M emb/s
+
+    # Luby parallel rounds
+    from repro.core.mis import mis_luby_update
+
+    h = jax.jit(lambda bm, e: mis_luby_update(bm, jnp.int32(0), e,
+                                              jnp.int32(cap),
+                                              jnp.int32(10**9), kk, n))
+    us = _time(h, bm, jnp.asarray(emb))
+    rows.append({"name": f"kernel/mis_luby/cap{cap}k{kk}",
+                 "us_per_call": round(us, 1),
+                 "derived": round(cap / (us * 1e-6) / 1e6, 3)})
+
+    # embedding bag (jnp path)
+    from repro.models.embedding import embedding_bag_apply, embedding_bag_init
+
+    tbl = embedding_bag_init(jax.random.key(0), 1_000_00, 64)
+    idx = jnp.asarray(rng.integers(0, 1_000_00, (8192, 4)), jnp.int32)
+    eb = jax.jit(lambda t, i: embedding_bag_apply(t, i))
+    us = _time(eb, tbl, idx)
+    rows.append({"name": "kernel/embedding_bag/B8192H4D64",
+                 "us_per_call": round(us, 1),
+                 "derived": round(8192 * 4 / (us * 1e-6) / 1e6, 2)})  # M lookups/s
+
+    # segment-sum GNN aggregation (jnp path)
+    from repro.models.gnn.common import scatter_sum
+
+    E, N, F = 100_000, 10_000, 128
+    msgs = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
+    dst = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+    mask = jnp.ones((E,), bool)
+    ss = jax.jit(lambda m, d: scatter_sum(m, d, mask, N))
+    us = _time(ss, msgs, dst)
+    rows.append({"name": f"kernel/scatter_sum/E{E}F{F}",
+                 "us_per_call": round(us, 1),
+                 "derived": round(E * F * 4 / (us * 1e-6) / 2**30, 2)})  # GiB/s
+
+    emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

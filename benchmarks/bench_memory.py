@@ -1,0 +1,28 @@
+"""Paper Fig 11 — peak memory vs support across variants."""
+from __future__ import annotations
+
+from .common import BENCH_DATASETS, emit, run_mine
+
+SUPPORTS = (6, 10)
+
+
+def main() -> None:
+    rows = []
+    for ds in BENCH_DATASETS:
+        for sigma in SUPPORTS:
+            for name, kw in [
+                ("flexis_0.4", dict(metric="mis", lam=0.4)),
+                ("mni_edge_ext", dict(metric="mni", generation="edge_ext")),
+                ("frac_edge_ext", dict(metric="frac", generation="edge_ext")),
+            ]:
+                res = run_mine(ds, sigma=sigma, **kw)
+                rows.append({
+                    "name": f"memory/{ds}/s{sigma}/{name}",
+                    "us_per_call": round(res.elapsed_s * 1e6, 1),
+                    "derived": res.peak_device_bytes,
+                })
+    emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

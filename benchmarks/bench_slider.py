@@ -1,0 +1,23 @@
+"""Paper Fig 13 — λ (slider) sweep: time and #frequent patterns."""
+from __future__ import annotations
+
+from .common import emit, run_mine
+
+LAMBDAS = (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
+
+
+def main() -> None:
+    rows = []
+    for lam in LAMBDAS:
+        res = run_mine("gnutella", sigma=8, lam=lam, metric="mis")
+        rows.append({
+            "name": f"slider/gnutella/lam{lam}",
+            "us_per_call": round(res.elapsed_s * 1e6, 1),
+            "derived": len(res.frequent),
+            "searched": res.searched,
+        })
+    emit(rows, ["name", "us_per_call", "derived", "searched"])
+
+
+if __name__ == "__main__":
+    main()

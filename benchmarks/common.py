@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing: timed mining runs + CSV emission.
+
+Every benchmark mirrors one paper artifact (DESIGN.md §7) on structure-
+matched synthetic stand-ins (scaled; labels were random in the paper too).
+CSV convention: ``name,us_per_call,derived`` per the harness contract, with
+additional artifact-specific columns after.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.core.flexis import MiningResult
+from repro.data.synthetic import paper_dataset
+
+# benches must run in CI-ish time on 1 CPU core: scaled datasets
+BENCH_SCALE = 0.02
+BENCH_DATASETS = ("gnutella", "wiki-vote")
+BENCH_MAX_SIZE = 3
+
+
+def run_mine(dataset: str, *, sigma: int, lam: float = 0.4,
+             metric: str = "mis", generation: str = "merge",
+             scale: float = BENCH_SCALE, max_size: int = BENCH_MAX_SIZE,
+             complete: bool = False, time_limit: float = 120.0,
+             seed: int = 0) -> MiningResult:
+    g = paper_dataset(dataset, scale=scale, seed=seed)
+    cfg = MiningConfig(
+        sigma=sigma, lam=lam, metric=metric, generation=generation,
+        max_pattern_size=max_size, complete=complete,
+        time_limit_s=time_limit, match=MatchConfig.for_graph(g, cap=4096))
+    return mine(g, cfg)
+
+
+def emit(rows: List[Dict], header: Optional[List[str]] = None):
+    if not rows:
+        return
+    cols = header or list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

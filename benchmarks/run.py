@@ -1,0 +1,48 @@
+"""Benchmark harness driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Emits ``name,us_per_call,derived[,...]`` CSV blocks per benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = [
+    ("execution_time (Fig 9/10)", "benchmarks.bench_execution_time"),
+    ("memory (Fig 11)", "benchmarks.bench_memory"),
+    ("patterns (Table 2 / Fig 12)", "benchmarks.bench_patterns"),
+    ("slider (Fig 13)", "benchmarks.bench_slider"),
+    ("similarity (Table 3)", "benchmarks.bench_similarity"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+
+    failures = 0
+    for label, modname in BENCHES:
+        if args.only and args.only not in modname:
+            continue
+        print(f"# === {label} [{modname}] ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            importlib.import_module(modname).main()
+        except Exception as e:  # surface but keep going
+            failures += 1
+            print(f"# FAILED: {e!r}", flush=True)
+        print(f"# ({time.monotonic() - t0:.1f}s)", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

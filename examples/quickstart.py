@@ -1,0 +1,62 @@
+"""Quickstart — the paper's Figure 1 worked example, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the 7-vertex data graph D and pattern P1 from the paper, counts
+support under every metric (MNI = 3, exact MIS = 2, mIS ∈ {1,2}, fractional
+≤ MNI), then mines D at σ=2 and shows P1 coming out frequent — including
+the λ-slider trade-off of §3.1.1.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MatchConfig, MiningConfig, build_graph, canonical_key, mine, paper_fig1,
+    tau_threshold,
+)
+from repro.core.metrics import (
+    enumerate_embeddings_host, exact_mis, greedy_mis_host,
+)
+
+
+def main():
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    print(f"data graph D: |V|={g.n} |E|={g.n_edges}")
+    print(f"pattern P1:   labels={p1.labels.tolist()} edges={p1.edges()}")
+
+    embs = enumerate_embeddings_host(g, p1)
+    print(f"\nembeddings of P1 in D: {embs.shape[0]} (paper: 6)")
+    print(f"  exact MIS  = {exact_mis(embs)}            (paper: 2)")
+    print(f"  greedy mIS = {len(greedy_mis_host(embs))}            (paper: 1 or 2)")
+
+    # τ interpolation (Eq. 1)
+    print("\nEq. 1 thresholds for a 3-vertex pattern at sigma=2:")
+    for lam in (0.0, 0.25, 1.0):
+        print(f"  lambda={lam:4}: tau={tau_threshold(2, lam, 3)}")
+
+    # mine D at sigma=2, lambda=1 — P1 must come out frequent with support 2
+    cfg = MiningConfig(sigma=2, lam=1.0, metric="mis", max_pattern_size=3,
+                       match=MatchConfig.for_graph(g, cap=256, root_block=8))
+    res = mine(g, cfg)
+    sup = {canonical_key(p): s for p, s in res.frequent}
+    print(f"\nmined {len(res.frequent)} frequent patterns "
+          f"(searched {res.searched} candidates)")
+    print(f"P1 frequent: {canonical_key(p1) in sup} "
+          f"(support={sup.get(canonical_key(p1))}, expect 2)")
+
+    # sigma=3: MNI says frequent (3 ≥ 3) but mIS correctly rejects (2 < 3)
+    cfg3 = MiningConfig(sigma=3, lam=1.0, metric="mis", max_pattern_size=3,
+                        match=MatchConfig.for_graph(g, cap=256, root_block=8))
+    r3 = mine(g, cfg3)
+    print(f"\nat sigma=3 (mIS): P1 frequent = "
+          f"{canonical_key(p1) in {canonical_key(p) for p, _ in r3.frequent}} "
+          f"(MNI would overestimate and accept)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serve a small LM with batched requests: prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Builds the reduced mixtral (MoE + sliding window — the interesting serving
+path), prefills a batch of prompts, then decodes tokens step by step with
+the rolling-window cache, reporting per-step latency.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.mixtral_8x7b import REDUCED as CFG
+from repro.models.transformer import (
+    init_decode_cache, transformer_apply, transformer_decode, transformer_init,
+)
+
+
+def main():
+    B, prompt_len, gen_len, max_seq = 4, 32, 16, 128
+    rng = np.random.default_rng(0)
+    params = transformer_init(jax.random.key(0), CFG)
+
+    prompts = jnp.asarray(rng.integers(0, CFG.vocab, (B, prompt_len)), jnp.int32)
+
+    # --- prefill: run the full prompt, then replay it into the cache -------
+    t0 = time.monotonic()
+    logits, _ = jax.jit(lambda p, t: transformer_apply(p, CFG, t))(params, prompts)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    print(f"prefill B={B} len={prompt_len}: {time.monotonic() - t0:.2f}s")
+
+    cache = init_decode_cache(CFG, B, max_seq)
+    decode = jax.jit(lambda p, c, t, pos: transformer_decode(p, CFG, c, t, pos))
+    # replay prompt tokens through the decode path to fill the cache
+    for i in range(prompt_len):
+        _, cache = decode(params, cache, prompts[:, i:i + 1],
+                          jnp.full((B,), i, jnp.int32))
+
+    # --- decode loop ---------------------------------------------------------
+    toks = [next_tok]
+    times = []
+    for step in range(gen_len):
+        pos = jnp.full((B,), prompt_len + step, jnp.int32)
+        t0 = time.monotonic()
+        logits, cache = decode(params, cache, toks[-1][:, None], pos)
+        logits.block_until_ready()
+        times.append(time.monotonic() - t0)
+        toks.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+
+    out = np.stack([np.asarray(t) for t in toks], axis=1)
+    print(f"decoded {gen_len} tokens/seq; "
+          f"median step latency {np.median(times) * 1e3:.1f} ms "
+          f"(batch {B}, rolling window {CFG.window})")
+    print("sample token ids:", out[0][:12], "…")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Architecture registry plumbing — every assigned arch is a `Arch` object
+exposing uniform hooks the launcher, dry-run, smoke tests and roofline use:
+
+  shapes()            → {shape_name: ShapeCell}
+  skip_reason(shape)  → str | None        (documented skips, DESIGN.md §5)
+  abstract_params()   → ShapeDtypeStruct pytree (full config, no allocation)
+  init_reduced(rng)   → real params for the reduced smoke config
+  input_specs(shape)  → ShapeDtypeStruct pytree of step inputs
+  step_fn(shape)      → jittable (params, *inputs) step (train loss+grads or
+                        serve forward), full config
+  reduced_step_fn(shape) / reduced_inputs(shape) → smoke-test variants
+  param_pspecs()      → PartitionSpec pytree for params
+  input_pspecs(shape) → PartitionSpec pytree for step inputs
+  model_flops(shape)  → analytic MODEL_FLOPS for §Roofline (6·N·D etc.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.sharding import logical_spec
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                 # train | prefill | decode | serve | retrieval
+    meta: Dict[str, Any]
+
+
+def spec_tree_like(tree, fn: Callable[[Tuple, Any], P]):
+    """Map (path, leaf) → PartitionSpec over an abstract pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(tuple(_key(p) for p in path), leaf), tree)
+
+
+def _key(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):
+        return str(p.name)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def sds(shape, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+class Arch:
+    """Base class; family subclasses live in lm.py / gnn_arch.py / recsys.py."""
+
+    name: str = "base"
+    family: str = "base"
+
+    # ---- to override -------------------------------------------------------
+    def shapes(self) -> Dict[str, ShapeCell]:
+        raise NotImplementedError
+
+    def skip_reason(self, shape: str) -> Optional[str]:
+        return None
+
+    def abstract_params(self, shape: str = None):
+        raise NotImplementedError
+
+    def input_specs(self, shape: str):
+        raise NotImplementedError
+
+    def step_fn(self, shape: str) -> Callable:
+        raise NotImplementedError
+
+    def param_pspecs(self, shape: str = None):
+        return spec_tree_like(self.abstract_params(shape),
+                              lambda path, leaf: P())
+
+    def input_pspecs(self, shape: str):
+        return jax.tree_util.tree_map(lambda _: P(), self.input_specs(shape))
+
+    def model_flops(self, shape: str) -> float:
+        raise NotImplementedError
+
+    # ---- smoke-test hooks ----------------------------------------------------
+    def init_reduced(self, rng):
+        raise NotImplementedError
+
+    def reduced_inputs(self, shape: str, rng):
+        raise NotImplementedError
+
+    def reduced_step_fn(self, shape: str) -> Callable:
+        raise NotImplementedError
+
+    # ---- shared helpers ------------------------------------------------------
+    def runnable_shapes(self):
+        return {k: v for k, v in self.shapes().items()
+                if self.skip_reason(k) is None}

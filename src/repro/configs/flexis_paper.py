@@ -1,0 +1,18 @@
+"""The paper's own workload as a dry-run config: distributed mIS mining.
+
+Not one of the 10 assigned archs — this is FLEXIS itself on the production
+mesh: a mico-scale data graph replicated per chip, match roots sharded over
+the whole mesh, Luby conflict-resolution collectives across it.
+"""
+import dataclasses
+
+# mining-cell geometry (mico-scale, paper Table 1)
+N_VERTICES = 100_000
+N_EDGES = 1_080_298
+N_LABELS = 29
+PATTERN_K = 4
+MATCH_CAP = 8192
+ROOT_BLOCK = 4096
+CHUNK = 32
+MAX_CHUNKS = 4
+BISECT_ITERS = 8

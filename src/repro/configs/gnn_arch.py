@@ -1,0 +1,198 @@
+"""GNN-family Arch wrapper — four shapes shared by all four GNN archs:
+
+  full_graph_sm   2,708 nodes / 10,556 edges / d_feat 1,433 (full-batch)
+  minibatch_lg    232,965-node graph, sampled blocks: 1,024 seeds, fanout 15-10
+  ogb_products    2,449,029 nodes / 61,859,140 edges / d_feat 100 (full-batch)
+  molecule        30 nodes / 64 edges × batch 128 (batched small graphs)
+
+Geometric models (SchNet/NequIP) consume positions; for non-molecular cells
+the pipeline synthesizes positions (DESIGN.md §5) — the kernel regime is
+what the cell exercises.  Every step is loss + grad + AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.gnn.common import GraphBatch
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .base import Arch, ShapeCell, sds
+
+# nodes/edges shard over (pod, data); a full-mesh variant was measured and
+# REFUTED — random edge→node gathers across 256 shards tripled collective
+# bytes (536 GiB/dev on ogb_products) for a 3× memory win; locality-aware
+# partitioning (METIS-style) is the real lever and is future work
+# (EXPERIMENTS.md §Perf bonus iteration).
+NODE_AXES = ("pod", "data")
+
+# (n_nodes, n_edges, d_feat, n_out, graph_level, n_graphs)
+GNN_SHAPES: Dict[str, ShapeCell] = {
+    "full_graph_sm": ShapeCell("full_graph_sm", "train", dict(
+        n_nodes=2708, n_edges=10556, d_feat=1433, n_out=7,
+        graph_level=False, n_graphs=1)),
+    "minibatch_lg": ShapeCell("minibatch_lg", "train", dict(
+        # sampled block: 1024 seeds × fanout (15, 10)
+        n_nodes=1024 * (1 + 15 + 150), n_edges=1024 * 15 + 1024 * 15 * 10,
+        d_feat=602, n_out=41, graph_level=False, n_graphs=1,
+        seeds=1024, fanout=(15, 10), graph_nodes=232_965,
+        graph_edges=114_615_892)),
+    "ogb_products": ShapeCell("ogb_products", "train", dict(
+        n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_out=47,
+        graph_level=False, n_graphs=1)),
+    "molecule": ShapeCell("molecule", "train", dict(
+        n_nodes=30 * 128, n_edges=64 * 2 * 128, d_feat=16, n_out=1,
+        graph_level=True, n_graphs=128)),
+}
+
+_REDUCED_META = dict(n_nodes=64, n_edges=256, d_feat=8, n_out=4,
+                     graph_level=False, n_graphs=1)
+
+
+@dataclasses.dataclass
+class GNNArch(Arch):
+    """model_builder(meta, reduced) → (cfg, init_fn(rng), loss_fn(params, gb))."""
+
+    arch_name: str
+    model_builder: Callable
+    needs_positions: bool = False
+    opt: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(lr=1e-3))
+    family: str = "gnn"
+
+    def __post_init__(self):
+        self.name = self.arch_name
+
+    def shapes(self) -> Dict[str, ShapeCell]:
+        return dict(GNN_SHAPES)
+
+    def _meta(self, shape: str, reduced: bool):
+        if reduced:
+            meta = dict(_REDUCED_META)
+            if shape == "molecule":
+                meta.update(graph_level=True, n_graphs=4, n_out=1)
+            return meta
+        return GNN_SHAPES[shape].meta
+
+    def _build(self, shape: str, reduced: bool = False):
+        return self.model_builder(self._meta(shape, reduced))
+
+    # ---- params ------------------------------------------------------------
+    def abstract_params(self, shape: str = "full_graph_sm"):
+        cfg, init_fn, loss_fn = self._build(shape)
+        return jax.eval_shape(lambda: init_fn(jax.random.key(0)))
+
+    def init_reduced(self, rng, shape: str = "full_graph_sm"):
+        cfg, init_fn, loss_fn = self._build(shape, reduced=True)
+        return init_fn(rng)
+
+    def param_pspecs(self, shape: str = "full_graph_sm"):
+        # GNN params are small — replicated; activations carry the sharding
+        return jax.tree_util.tree_map(lambda _: P(),
+                                      self.abstract_params(shape))
+
+    def abstract_opt(self, shape: str = "full_graph_sm"):
+        return jax.eval_shape(adamw_init, self.abstract_params(shape))
+
+    def opt_pspecs(self, shape: str = "full_graph_sm"):
+        from ..train.optimizer import AdamWState
+
+        ps = self.param_pspecs(shape)
+        return AdamWState(step=P(), mu=ps, nu=ps)
+
+    # ---- inputs ------------------------------------------------------------
+    @staticmethod
+    def _pad(n: int, mult: int = 512) -> int:
+        """Nodes/edges padded to mesh-divisible sizes (masked anyway)."""
+        return -(-n // mult) * mult
+
+    def _batch_specs(self, meta) -> GraphBatch:
+        N, E = self._pad(meta["n_nodes"]), self._pad(meta["n_edges"])
+        if meta["graph_level"]:
+            tgt = sds((meta["n_graphs"],), jnp.float32)
+        elif meta["n_out"] == 1:
+            tgt = sds((N,), jnp.float32)
+        else:
+            tgt = sds((N,), jnp.int32)
+        return GraphBatch(
+            x=sds((N, meta["d_feat"]), jnp.float32),
+            edge_src=sds((E,), jnp.int32),
+            edge_dst=sds((E,), jnp.int32),
+            edge_mask=sds((E,), jnp.bool_),
+            node_mask=sds((N,), jnp.bool_),
+            graph_ids=sds((N,), jnp.int32),
+            n_graphs=meta["n_graphs"],
+            targets=tgt,
+            pos=sds((N, 3), jnp.float32) if self.needs_positions else None,
+        )
+
+    def input_specs(self, shape: str, *, reduced: bool = False):
+        return {"batch": self._batch_specs(self._meta(shape, reduced))}
+
+    def input_pspecs(self, shape: str):
+        def leaf_spec(leaf):
+            if leaf is None:
+                return None
+            return P(NODE_AXES, *([None] * (len(leaf.shape) - 1)))
+
+        gb = self.input_specs(shape)["batch"]
+        spec = jax.tree_util.tree_map(leaf_spec, gb)
+        return {"batch": spec}
+
+    # ---- steps ---------------------------------------------------------------
+    def _mk_step(self, shape: str, reduced: bool):
+        cfg, init_fn, loss_fn = self._build(shape, reduced)
+        opt_cfg = self.opt
+
+        def step(params, opt_state, batch: GraphBatch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+            return loss, params, opt_state
+
+        return step
+
+    def step_fn(self, shape: str, *, reduced: bool = False) -> Callable:
+        return self._mk_step(shape, reduced)
+
+    def reduced_step_fn(self, shape: str) -> Callable:
+        return self._mk_step(shape, True)
+
+    def reduced_inputs(self, shape: str, rng):
+        meta = self._meta(shape, reduced=True)
+        r = np.random.default_rng(0)
+        N, E = meta["n_nodes"], meta["n_edges"]
+        if meta["graph_level"]:
+            tgt = jnp.asarray(r.normal(size=(meta["n_graphs"],)), jnp.float32)
+        elif meta["n_out"] == 1:
+            tgt = jnp.asarray(r.normal(size=(N,)), jnp.float32)
+        else:
+            tgt = jnp.asarray(r.integers(0, meta["n_out"], N), jnp.int32)
+        gb = GraphBatch(
+            x=jnp.asarray(r.normal(size=(N, meta["d_feat"])), jnp.float32),
+            edge_src=jnp.asarray(r.integers(0, N, E), jnp.int32),
+            edge_dst=jnp.asarray(r.integers(0, N, E), jnp.int32),
+            edge_mask=jnp.ones((E,), bool),
+            node_mask=jnp.ones((N,), bool),
+            graph_ids=jnp.asarray(
+                np.sort(r.integers(0, meta["n_graphs"], N)), jnp.int32),
+            n_graphs=meta["n_graphs"],
+            targets=tgt,
+            pos=jnp.asarray(r.normal(size=(N, 3)), jnp.float32)
+            if self.needs_positions else None,
+        )
+        return {"batch": gb}
+
+    # ---- roofline --------------------------------------------------------------
+    def model_flops(self, shape: str) -> float:
+        cfg, _, _ = self._build(shape)
+        meta = GNN_SHAPES[shape].meta
+        N, E, F = meta["n_nodes"], meta["n_edges"], meta["d_feat"]
+        H = getattr(cfg, "d_hidden", 128)
+        L = (getattr(cfg, "n_layers", None)
+             or getattr(cfg, "n_interactions", 2))
+        # train ≈ 3 × fwd; fwd ≈ per-layer (edge MLP-ish on E + node mixing on N)
+        per_layer = 2.0 * E * H * 2 + 2.0 * N * H * H
+        return 3.0 * (2.0 * N * F * H + L * per_layer + 2.0 * N * H * meta["n_out"])

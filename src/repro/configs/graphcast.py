@@ -1,0 +1,42 @@
+"""graphcast [gnn] — 16-layer encoder-processor-decoder mesh GNN,
+d_hidden=512, mesh_refinement=6, sum aggregator, n_vars=227
+(arXiv:2212.12794; unverified)."""
+import jax.numpy as jnp
+
+from ..models.gnn.common import node_regression_loss
+from ..models.gnn.graphcast import (
+    GraphCastConfig,
+    graphcast_apply,
+    graphcast_init,
+    graphcast_loss,
+)
+from .gnn_arch import GNNArch
+
+
+def _build(meta):
+    small = meta["d_feat"] <= 8
+    cfg = GraphCastConfig(
+        d_in=meta["d_feat"],
+        d_hidden=512 if not small else 16,
+        n_layers=16 if not small else 2,
+        n_vars=227 if not small else 4,
+        mesh_refinement=6,
+    )
+
+    def loss(params, gb):
+        pred = graphcast_apply(params, cfg, gb)
+        # targets may be class ids / scalars / per-graph values for the
+        # generic shapes — regress onto a broadcast target column (the cell
+        # exercises the same kernels either way)
+        tgt = gb.targets
+        if tgt.ndim == 1 and tgt.shape[0] != pred.shape[0]:
+            tgt = tgt[gb.graph_ids]          # per-graph → per-node
+        if tgt.ndim == 1:
+            tgt = jnp.broadcast_to(
+                tgt.astype(jnp.float32)[:, None], pred.shape)
+        return node_regression_loss(pred, tgt, gb.node_mask)
+
+    return cfg, (lambda rng: graphcast_init(rng, cfg)), loss
+
+
+ARCH = GNNArch("graphcast", _build, needs_positions=False)

@@ -1,0 +1,257 @@
+"""LM-family Arch wrapper: shapes, steps, shardings, roofline FLOPs.
+
+The four assigned LM shapes (seq_len × global_batch):
+  train_4k     4,096 × 256   — train_step (loss + grad + AdamW)
+  prefill_32k  32,768 × 32   — serve prefill (forward, chunked attention)
+  decode_32k   32,768 × 128  — serve_step: ONE new token, 32k KV cache
+  long_500k    524,288 × 1   — long-context decode (skipped for pure
+                               full-attention archs; see DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.transformer import (
+    TransformerConfig,
+    init_decode_cache,
+    lm_loss,
+    transformer_apply,
+    transformer_decode,
+    transformer_init,
+)
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .base import Arch, ShapeCell, sds, spec_tree_like
+
+LM_SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", {"seq": 4096, "batch": 256}),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", {"seq": 32768, "batch": 32}),
+    "decode_32k": ShapeCell("decode_32k", "decode", {"seq": 32768, "batch": 128}),
+    "long_500k": ShapeCell("long_500k", "decode", {"seq": 524288, "batch": 1}),
+}
+
+_2D = ("wq", "wk", "wv", "wo", "wi", "wg")
+
+
+def _wkv_mode() -> str:
+    """Perf-experiment toggle (EXPERIMENTS.md §Perf, hypothesis H2).
+
+    'col' (baseline): shard wk/wv output columns — splits head_dim when
+        kv_heads < model axis, forcing an f32 scores all-reduce per layer.
+    'replicated': keep wk/wv replicated (they are tiny under GQA) — no
+        head_dim split, no scores all-reduce.
+    """
+    import os
+
+    return os.environ.get("REPRO_WKV_MODE", "col")
+
+
+def _lm_pspec(path, leaf) -> P:
+    rank = len(leaf.shape)
+    names = [p for p in path]
+    if "embed" in names:
+        base = ("model", None)        # (vocab, d_model)
+    elif any(n in ("moe",) for n in names):
+        nm = names[-1] if names[-1] != "kernel" else names[-2]
+        if nm in ("wi", "wg", "wo"):
+            base = ("model", None, None)   # (experts, ·, ·) — EP
+        else:                               # router
+            base = (None, None)
+    else:
+        nm = names[-2] if names[-1] == "kernel" else names[-1]
+        if nm in ("wk", "wv") and _wkv_mode() == "replicated":
+            base = (None, None)
+        elif nm in ("wq", "wk", "wv", "wi", "wg"):
+            base = (None, "model")
+        elif nm == "wo":
+            base = ("model", None)
+        else:                               # norms etc.
+            base = (None,) * min(rank, 1)
+    pad = rank - len(base)
+    return P(*((None,) * pad), *base)
+
+
+@dataclasses.dataclass
+class LMArch(Arch):
+    arch_name: str
+    cfg: TransformerConfig
+    reduced_cfg: TransformerConfig
+    sub_quadratic: bool = False  # window / local-global archs run long_500k
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    family: str = "lm"
+
+    def __post_init__(self):
+        self.name = self.arch_name
+
+    # ---- cost-calibration hooks (see launch/dryrun.py) ----------------------
+    # XLA cost analysis counts while-loop bodies once; the dry-run lowers an
+    # unrolled 2-scan-step twin (U2) next to the scanned full model (S) and
+    # solves body = U2 − S, corrected = S + (n_steps − 1)·body.
+    def calibration_arch(self) -> "LMArch":
+        cal = dataclasses.replace(
+            self.cfg,
+            n_layers=2 * self.cfg.layers_per_step,
+            scan_layers=False)
+        return dataclasses.replace(self, cfg=cal)
+
+    @property
+    def scan_steps(self) -> int:
+        return self.cfg.n_scan_steps
+
+    # ---- shapes -------------------------------------------------------------
+    def shapes(self) -> Dict[str, ShapeCell]:
+        return dict(LM_SHAPES)
+
+    def skip_reason(self, shape: str) -> Optional[str]:
+        if shape == "long_500k" and not self.sub_quadratic:
+            return ("pure full-attention stack: no sub-quadratic path for "
+                    "524k context (documented skip, DESIGN.md §5)")
+        return None
+
+    # ---- params ---------------------------------------------------------------
+    def abstract_params(self, shape: str = None):
+        return jax.eval_shape(
+            lambda: transformer_init(jax.random.key(0), self.cfg))
+
+    def init_reduced(self, rng):
+        return transformer_init(rng, self.reduced_cfg)
+
+    def param_pspecs(self, shape: str = None):
+        return spec_tree_like(self.abstract_params(shape), _lm_pspec)
+
+    def opt_pspecs(self, shape: str = None):
+        from ..train.optimizer import AdamWState
+
+        ps = self.param_pspecs(shape)
+        return AdamWState(step=P(), mu=ps, nu=ps)
+
+    def abstract_opt(self, shape: str = None):
+        return jax.eval_shape(adamw_init, self.abstract_params(shape))
+
+    # ---- inputs ---------------------------------------------------------------
+    def _bs(self, shape: str, cfg: TransformerConfig):
+        meta = LM_SHAPES[shape].meta
+        if cfg is self.reduced_cfg:
+            return {"train_4k": (2, 64), "prefill_32k": (2, 128),
+                    "decode_32k": (4, 128), "long_500k": (1, 256)}[shape]
+        return meta["batch"], meta["seq"]
+
+    def input_specs(self, shape: str, *, reduced: bool = False):
+        cfg = self.reduced_cfg if reduced else self.cfg
+        B, S = self._bs(shape, cfg)
+        kind = LM_SHAPES[shape].kind
+        if kind == "train":
+            return {"tokens": sds((B, S), jnp.int32),
+                    "targets": sds((B, S), jnp.int32)}
+        if kind == "prefill":
+            return {"tokens": sds((B, S), jnp.int32)}
+        cache = jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+        return {"cache": cache,
+                "tokens": sds((B, 1), jnp.int32),
+                "positions": sds((B,), jnp.int32)}
+
+    def input_pspecs(self, shape: str):
+        kind = LM_SHAPES[shape].kind
+        batch_axes = ("pod", "data")
+        B, S = self._bs(shape, self.cfg)
+        if kind in ("train", "prefill"):
+            return jax.tree_util.tree_map(
+                lambda _: P(batch_axes), self.input_specs(shape))
+        # decode: cache (layers, B, L, KV, hd) — batch over data when it
+        # divides, sequence over model (kv_seq); tokens/positions over batch
+        seq_axes = ("model",) if B > 1 else ("data", "model")
+        cache_spec = jax.tree_util.tree_map(
+            lambda leaf: P(None, batch_axes if B > 1 else None,
+                           seq_axes if len(seq_axes) > 1 else seq_axes[0]),
+            self.input_specs(shape)["cache"])
+        return {"cache": cache_spec,
+                "tokens": P(batch_axes if B > 1 else None),
+                "positions": P(batch_axes if B > 1 else None)}
+
+    # ---- steps ----------------------------------------------------------------
+    def _train_step(self, cfg: TransformerConfig):
+        opt_cfg = self.opt
+
+        def step(params, opt_state, tokens, targets):
+            loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, targets)
+            params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+            return loss, params, opt_state
+
+        return step
+
+    def _prefill_step(self, cfg: TransformerConfig):
+        def step(params, tokens):
+            logits, _ = transformer_apply(params, cfg, tokens)
+            # serve prefill returns last-position logits only
+            return logits[:, -1]
+
+        return step
+
+    def _decode_step(self, cfg: TransformerConfig):
+        def step(params, cache, tokens, positions):
+            return transformer_decode(params, cfg, cache, tokens, positions)
+
+        return step
+
+    def step_fn(self, shape: str, *, reduced: bool = False) -> Callable:
+        cfg = self.reduced_cfg if reduced else self.cfg
+        kind = LM_SHAPES[shape].kind
+        if kind == "train":
+            return self._train_step(cfg)
+        if kind == "prefill":
+            return self._prefill_step(cfg)
+        return self._decode_step(cfg)
+
+    def reduced_inputs(self, shape: str, rng):
+        specs = self.input_specs(shape, reduced=True)
+        cfg = self.reduced_cfg
+
+        def make(leaf):
+            if leaf.dtype == jnp.int32:
+                return jnp.asarray(
+                    np.random.default_rng(0).integers(0, cfg.vocab, leaf.shape),
+                    jnp.int32)
+            return jnp.zeros(leaf.shape, leaf.dtype)
+
+        out = jax.tree_util.tree_map(make, specs)
+        if "positions" in out:
+            out["positions"] = jnp.zeros(out["positions"].shape, jnp.int32) + 3
+        return out
+
+    def reduced_step_fn(self, shape: str) -> Callable:
+        return self.step_fn(shape, reduced=True)
+
+    # ---- roofline ---------------------------------------------------------------
+    def _attn_ctx(self, S: int, local: bool) -> float:
+        cfg = self.cfg
+        if cfg.local_global:
+            w = cfg.window if local else None
+        else:
+            w = cfg.window
+        return float(min(S, w)) if w is not None else float(S)
+
+    def model_flops(self, shape: str) -> float:
+        cfg = self.cfg
+        B, S = self._bs(shape, cfg)
+        kind = LM_SHAPES[shape].kind
+        N = cfg.active_param_count()
+        L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        # mean causal context per layer type
+        if cfg.local_global:
+            ctx = 0.5 * (min(S, cfg.window) + S)
+        elif cfg.window is not None:
+            ctx = min(S, cfg.window)
+        else:
+            ctx = S
+        if kind == "train":
+            return 6.0 * N * B * S + 6.0 * L * H * hd * ctx * B * S
+        if kind == "prefill":
+            return 2.0 * N * B * S + 2.0 * L * H * hd * ctx * B * S
+        # decode: one token, full-cache attention reads
+        return 2.0 * N * B + 4.0 * L * H * hd * ctx * B

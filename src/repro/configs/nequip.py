@@ -1,0 +1,24 @@
+"""nequip [gnn] — 5 layers, d_hidden=32, l_max=2, 8 RBF, cutoff 5,
+E(3)-equivariant tensor products (arXiv:2101.03164; paper)."""
+from ..models.gnn.nequip import NequIPConfig, nequip_init, nequip_loss
+from .gnn_arch import GNNArch
+
+
+def _build(meta):
+    small = meta["d_feat"] <= 8
+    cfg = NequIPConfig(
+        d_in=meta["d_feat"],
+        d_hidden=32 if not small else 8,
+        n_layers=5 if not small else 2,
+        n_rbf=8,
+        cutoff=5.0,
+        graph_level=meta["graph_level"],
+    )
+
+    def loss(params, gb):
+        return nequip_loss(params, cfg, gb)
+
+    return cfg, (lambda rng: nequip_init(rng, cfg)), loss
+
+
+ARCH = GNNArch("nequip", _build, needs_positions=True)

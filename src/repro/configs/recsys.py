@@ -1,0 +1,187 @@
+"""RecSys-family Arch wrapper — DLRM shapes:
+
+  train_batch     batch=65,536  (training: loss + grad + AdamW)
+  serve_p99       batch=512     (online inference forward)
+  serve_bulk      batch=262,144 (offline scoring forward)
+  retrieval_cand  batch=1 × 1,000,000 candidates (batched-dot retrieval)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.dlrm import (
+    DLRMConfig,
+    dlrm_apply,
+    dlrm_init,
+    dlrm_loss,
+    retrieval_score,
+)
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .base import Arch, ShapeCell, sds
+
+BATCH_AXES = ("pod", "data")
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeCell("train_batch", "train", dict(batch=65_536)),
+    "serve_p99": ShapeCell("serve_p99", "serve", dict(batch=512)),
+    "serve_bulk": ShapeCell("serve_bulk", "serve", dict(batch=262_144)),
+    "retrieval_cand": ShapeCell("retrieval_cand", "retrieval",
+                                dict(batch=1, n_candidates=1_000_000)),
+}
+
+
+def _dlrm_pspec(path, leaf) -> P:
+    names = [str(p) for p in path]
+    if "tables" in names:
+        return P("model", None)  # row-sharded embedding tables
+    return P(*([None] * len(leaf.shape)))
+
+
+@dataclasses.dataclass
+class RecsysArch(Arch):
+    arch_name: str
+    cfg: DLRMConfig
+    reduced_cfg: DLRMConfig
+    opt: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(lr=1e-3))
+    family: str = "recsys"
+
+    def __post_init__(self):
+        self.name = self.arch_name
+
+    def shapes(self) -> Dict[str, ShapeCell]:
+        return dict(RECSYS_SHAPES)
+
+    # ---- params ------------------------------------------------------------
+    def abstract_params(self, shape: str = None):
+        return jax.eval_shape(lambda: dlrm_init(jax.random.key(0), self.cfg))
+
+    def init_reduced(self, rng):
+        return dlrm_init(rng, self.reduced_cfg)
+
+    def param_pspecs(self, shape: str = None):
+        from .base import spec_tree_like
+
+        return spec_tree_like(self.abstract_params(shape), _dlrm_pspec)
+
+    def abstract_opt(self, shape: str = None):
+        return jax.eval_shape(adamw_init, self.abstract_params(shape))
+
+    def opt_pspecs(self, shape: str = None):
+        from ..train.optimizer import AdamWState
+
+        ps = self.param_pspecs(shape)
+        return AdamWState(step=P(), mu=ps, nu=ps)
+
+    # ---- inputs ------------------------------------------------------------
+    def _b(self, shape: str, reduced: bool) -> int:
+        if reduced:
+            return {"train_batch": 32, "serve_p99": 8, "serve_bulk": 64,
+                    "retrieval_cand": 1}[shape]
+        return RECSYS_SHAPES[shape].meta["batch"]
+
+    def input_specs(self, shape: str, *, reduced: bool = False):
+        cfg = self.reduced_cfg if reduced else self.cfg
+        B = self._b(shape, reduced)
+        specs = {
+            "dense": sds((B, cfg.n_dense), jnp.float32),
+            "sparse_idx": sds((B, cfg.n_sparse, cfg.n_hot), jnp.int32),
+        }
+        kind = RECSYS_SHAPES[shape].kind
+        if kind == "train":
+            specs["labels"] = sds((B,), jnp.int32)
+        if kind == "retrieval":
+            C = 10_000 if reduced else RECSYS_SHAPES[shape].meta["n_candidates"]
+            C = -(-C // 512) * 512  # pad to mesh-divisible (scores are ranked)
+            specs["candidates"] = sds((C, cfg.embed_dim), jnp.float32)
+        return specs
+
+    def input_pspecs(self, shape: str):
+        kind = RECSYS_SHAPES[shape].kind
+        out = {
+            "dense": P(BATCH_AXES, None),
+            "sparse_idx": P(BATCH_AXES, None, None),
+        }
+        if kind == "train":
+            out["labels"] = P(BATCH_AXES)
+        if kind == "retrieval":
+            out["dense"] = P(None, None)
+            out["sparse_idx"] = P(None, None, None)
+            out["candidates"] = P(("data", "model"), None)
+        return out
+
+    # ---- steps ---------------------------------------------------------------
+    def step_fn(self, shape: str, *, reduced: bool = False) -> Callable:
+        cfg = self.reduced_cfg if reduced else self.cfg
+        kind = RECSYS_SHAPES[shape].kind
+        opt_cfg = self.opt
+        if kind == "train":
+            def train_step(params, opt_state, dense, sparse_idx, labels):
+                loss, grads = jax.value_and_grad(dlrm_loss)(
+                    params, cfg, dense, sparse_idx, labels)
+                params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+                return loss, params, opt_state
+            return train_step
+        if kind == "retrieval":
+            def retr_step(params, dense, sparse_idx, candidates):
+                return retrieval_score(params, cfg, dense, sparse_idx,
+                                       candidates, top_k=100)
+            return retr_step
+
+        def serve_step(params, dense, sparse_idx):
+            return jax.nn.sigmoid(dlrm_apply(params, cfg, dense, sparse_idx))
+        return serve_step
+
+    def reduced_step_fn(self, shape: str) -> Callable:
+        return self.step_fn(shape, reduced=True)
+
+    def reduced_inputs(self, shape: str, rng):
+        cfg = self.reduced_cfg
+        r = np.random.default_rng(0)
+        specs = self.input_specs(shape, reduced=True)
+        out = {}
+        for k, v in specs.items():
+            if v.dtype == jnp.int32:
+                hi = cfg.table_rows if k == "sparse_idx" else 2
+                out[k] = jnp.asarray(r.integers(0, hi, v.shape), jnp.int32)
+            else:
+                out[k] = jnp.asarray(r.normal(size=v.shape), jnp.float32)
+        return out
+
+    # ---- roofline --------------------------------------------------------------
+    def model_flops(self, shape: str) -> float:
+        cfg = self.cfg
+        B = self._b(shape, False)
+        kind = RECSYS_SHAPES[shape].kind
+        dims_bot = (cfg.n_dense,) + cfg.bot_mlp
+        dims_top = (cfg.top_in,) + cfg.top_mlp
+        mlp = sum(2 * a * b for a, b in zip(dims_bot, dims_bot[1:]))
+        mlp += sum(2 * a * b for a, b in zip(dims_top, dims_top[1:]))
+        f = cfg.n_sparse + 1
+        interact = 2 * f * f * cfg.embed_dim
+        lookup = 2 * cfg.n_sparse * cfg.n_hot * cfg.embed_dim
+        fwd = B * (mlp + interact + lookup)
+        if kind == "train":
+            return 3.0 * fwd
+        if kind == "retrieval":
+            C = RECSYS_SHAPES[shape].meta["n_candidates"]
+            return fwd + 2.0 * B * C * cfg.embed_dim
+        return float(fwd)
+
+
+CONFIG = DLRMConfig(
+    n_dense=13, n_sparse=26, embed_dim=64,
+    bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1),
+    table_rows=1_000_000, n_hot=1,
+)
+
+REDUCED = DLRMConfig(
+    n_dense=13, n_sparse=26, embed_dim=16,
+    bot_mlp=(32, 16), top_mlp=(64, 32, 1),
+    table_rows=1000, n_hot=1,
+)

@@ -1,0 +1,42 @@
+"""Arch registry: ``--arch <id>`` resolution for launcher/dryrun/tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCH_MODULES = {
+    # LM family
+    "minitron-4b": ".minitron_4b",
+    "gemma2-27b": ".gemma2_27b",
+    "qwen3-1.7b": ".qwen3_1_7b",
+    "qwen3-moe-30b-a3b": ".qwen3_moe_30b_a3b",
+    "mixtral-8x7b": ".mixtral_8x7b",
+    # GNN family
+    "graphsage-reddit": ".graphsage_reddit",
+    "schnet": ".schnet",
+    "nequip": ".nequip",
+    "graphcast": ".graphcast",
+    # RecSys family
+    "dlrm-rm2": ".dlrm_rm2",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_arch(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[name], package=__package__)
+    return mod.ARCH
+
+
+def all_cells():
+    """Every (arch, shape) cell, with documented skips included."""
+    cells = []
+    for name in list_archs():
+        arch = get_arch(name)
+        for shape in arch.shapes():
+            cells.append((name, shape, arch.skip_reason(shape)))
+    return cells

@@ -1,0 +1,40 @@
+"""FLEXIS core — the paper's contribution as a composable JAX module."""
+from .graph import DataGraph, DeviceGraph, build_graph
+from .pattern import Pattern, pattern_from_edges, paper_fig1
+from .canonical import (
+    are_isomorphic,
+    automorphisms,
+    canonical_form,
+    canonical_key,
+    dedupe_patterns,
+)
+from .generation import (
+    core_graphs,
+    core_groups,
+    edge_extension_candidates,
+    generate_new_patterns,
+    size2_patterns,
+)
+from .plan import PatternPlan, make_plan
+from .matcher import MatchConfig, match_block
+from .flexis import (
+    MiningConfig,
+    MiningResult,
+    PatternStats,
+    evaluate_pattern,
+    initial_candidates,
+    mine,
+    tau_threshold,
+)
+
+__all__ = [
+    "DataGraph", "DeviceGraph", "build_graph",
+    "Pattern", "pattern_from_edges", "paper_fig1",
+    "are_isomorphic", "automorphisms", "canonical_form", "canonical_key",
+    "dedupe_patterns",
+    "core_graphs", "core_groups", "edge_extension_candidates",
+    "generate_new_patterns", "size2_patterns",
+    "PatternPlan", "make_plan", "MatchConfig", "match_block",
+    "MiningConfig", "MiningResult", "PatternStats", "evaluate_pattern",
+    "initial_candidates", "mine", "tau_threshold",
+]

@@ -1,0 +1,169 @@
+"""Distributed FLEXIS mining — shard_map over match roots.
+
+Scaling story (DESIGN.md §4): the data graph is replicated (FSM graphs are
+MBs; the *work* is the search), match roots are sharded across every device
+in the mesh, and the mIS metric's conflict resolution becomes the collective
+signature of the technique:
+
+  per Luby round:   all-reduce(min)  over the (n,) per-vertex priority array
+                    all-reduce(sum)  over the packed bitmap word-addends
+                    all-reduce(sum)  of the accepted count
+
+Priorities are globally unique (device_index · cap + local row), so winners
+are globally vertex-disjoint and the bitwise-OR of retired vertices is an
+exact scatter-add — no second pass needed.
+
+Straggler note: blocks are fixed-size and uniform; root-block work variance
+(hub vertices) is bounded by the frontier cap, so a step is O(cap · chunks)
+on every device regardless of local degree skew — the mitigation is
+structural rather than reactive.  The host round-robins super-blocks, which
+also gives elastic re-entry: a rescheduled mesh just resumes from the
+current super-block with the carried (bitmap, count) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .graph import DataGraph, DeviceGraph
+from .pattern import Pattern
+from .plan import PatternPlan, make_plan
+from .matcher import MatchConfig, match_block
+from . import mis as mis_lib
+
+__all__ = ["mining_mesh", "sharded_mis_step", "distributed_support"]
+
+
+def mining_mesh(axis: str = "workers", devices=None) -> Mesh:
+    """A 1-D mesh over all available devices (mining shards roots, period)."""
+    devices = np.array(jax.devices() if devices is None else devices)
+    return jax.make_mesh(
+        (devices.size,), (axis,),
+        axis_types=(jax.sharding.AxisType.Auto,),
+        devices=devices,
+    )
+
+
+def _luby_rounds_global(bitmap, count, emb, n_valid, tau, k: int, n: int,
+                        cap: int, axis: str):
+    """Globally-synchronized Luby rounds inside shard_map.
+
+    bitmap/count are replicated; emb/n_valid are per-device locals.
+    """
+    ndev = jax.lax.axis_size(axis)
+    didx = jax.lax.axis_index(axis).astype(jnp.int32)
+    rowid = jnp.arange(cap, dtype=jnp.int32)
+    gprio_base = didx * cap
+    INF = jnp.int32(ndev * cap)
+    vs = jnp.clip(emb[:, :k], 0, None)
+    valid = rowid < n_valid
+
+    def touches(bm):
+        return mis_lib.touches_used(bm, vs)
+
+    state0 = (bitmap, count, valid & ~touches(bitmap))
+
+    def cond(state):
+        bm, cnt, alive = state
+        any_alive = jax.lax.pmax(jnp.any(alive).astype(jnp.int32), axis) > 0
+        return any_alive & (cnt < tau)
+
+    def body(state):
+        bm, cnt, alive = state
+        prio = jnp.where(alive, gprio_base + rowid, INF)
+        vmin = jnp.full((n,), INF, dtype=jnp.int32)
+        vmin = vmin.at[vs].min(prio[:, None])
+        vmin = jax.lax.pmin(vmin, axis)                       # ← collective 1
+        win = alive & jnp.all(vmin[vs] == prio[:, None], axis=1)
+        # global τ cut in priority order: exclusive prefix of win-counts
+        local_wins = win.sum().astype(jnp.int32)
+        all_wins = jax.lax.all_gather(local_wins, axis)       # ← collective 2
+        prefix = jnp.sum(jnp.where(jnp.arange(ndev) < didx, all_wins, 0))
+        win_rank = prefix + jnp.cumsum(win.astype(jnp.int32)) - 1
+        win &= win_rank < (tau - cnt)
+        words = (vs >> 5).astype(jnp.int32)
+        bits = jnp.uint32(1) << (vs & 31).astype(jnp.uint32)
+        addend = jnp.zeros_like(bm).at[words].add(
+            jnp.where(win[:, None], bits, jnp.uint32(0)))
+        addend = jax.lax.psum(addend, axis)                   # ← collective 3
+        bm = bm + addend                                      # add ≡ OR here
+        cnt = cnt + jax.lax.psum(win.sum().astype(jnp.int32), axis)
+        alive = alive & ~win & ~touches(bm)
+        return bm, cnt, alive
+
+    bitmap, count, _ = jax.lax.while_loop(cond, body, state0)
+    return bitmap, count
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "k", "n", "axis", "mesh"))
+def sharded_mis_step(g: DeviceGraph, plan: PatternPlan, block_starts,
+                     bitmap, count, tau, *, cfg: MatchConfig, k: int, n: int,
+                     axis: str, mesh: Mesh):
+    """One distributed mining step: every device matches its own root block,
+    then the mesh resolves mIS conflicts globally.
+
+    block_starts: (ndev,) int32 — one root-block origin per device.
+    bitmap/count: replicated metric state. Returns (bitmap, count, found).
+    """
+
+    def step(block_start, bm, cnt):
+        emb, n_valid, found, _ = match_block(g, plan, block_start[0], cfg)
+        bm, cnt = _luby_rounds_global(bm, cnt, emb, n_valid, tau, k, n,
+                                      cfg.cap, axis)
+        return bm, cnt, jax.lax.psum(found, axis)
+
+    return jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(axis), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )(block_starts, bitmap, count)
+
+
+def distributed_support(
+    host_g: DataGraph,
+    pat: Pattern,
+    tau: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "workers",
+    match_cfg: Optional[MatchConfig] = None,
+    complete: bool = False,
+) -> Tuple[int, int]:
+    """mIS support of one pattern, mined across the whole mesh.
+
+    Returns (support, embeddings_found).  Semantics match the single-device
+    `evaluate_pattern(metric="mis_luby")`: the complete run yields the
+    lexicographically-first maximal independent set in global priority order.
+    """
+    mesh = mesh or mining_mesh(axis)
+    ndev = int(np.prod(list(mesh.shape.values())))
+    cfg = match_cfg or MatchConfig.for_graph(host_g)
+    dev_g = DeviceGraph.from_host(host_g)
+    plan = make_plan(pat, host_g)
+    n = host_g.n
+    bitmap = mis_lib.bitmap_init(n)
+    count = jnp.int32(0)
+    tau_dev = jnp.int32(np.iinfo(np.int32).max if complete else tau)
+    found_total = 0
+
+    stride = ndev * cfg.root_block
+    n_super = -(-n // stride)
+    for s in range(n_super):
+        starts = jnp.asarray(
+            s * stride + np.arange(ndev) * cfg.root_block, jnp.int32)
+        bitmap, count, found = sharded_mis_step(
+            dev_g, plan, starts, bitmap, count, tau_dev,
+            cfg=cfg, k=pat.k, n=n, axis=axis, mesh=mesh)
+        found_total += int(found)
+        if not complete and int(count) >= tau:
+            break
+    return int(count), found_total

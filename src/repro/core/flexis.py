@@ -1,0 +1,268 @@
+"""FLEXIS — Algorithm 1: the level-wise mining loop.
+
+Host control plane: candidate generation (Alg 2–4), τ computation (Eq. 1),
+early termination, timeout.  Device data plane: `match_block` frontier
+expansion + metric updates, one jit per pattern size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graph import DataGraph, DeviceGraph
+from .pattern import Pattern
+from .canonical import canonical_key, dedupe_patterns
+from .generation import edge_extension_candidates, generate_new_patterns
+from .matcher import MatchConfig, match_block
+from .plan import make_plan
+from . import mis as mis_lib
+from . import metrics as metrics_lib
+
+__all__ = ["MiningConfig", "PatternStats", "MiningResult", "tau_threshold", "mine",
+           "evaluate_pattern", "initial_candidates"]
+
+_METRICS = ("mis", "mis_luby", "mni", "frac", "mis_exact")
+_GENERATION = ("merge", "edge_ext")
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningConfig:
+    sigma: int
+    lam: float = 0.4
+    metric: str = "mis"            # one of _METRICS
+    generation: str = "merge"      # one of _GENERATION
+    max_pattern_size: int = 5
+    complete: bool = False         # disable τ early exit (exact metric values)
+    time_limit_s: Optional[float] = None
+    match: MatchConfig = dataclasses.field(default_factory=MatchConfig)
+
+    def __post_init__(self):
+        if self.metric not in _METRICS:
+            raise ValueError(f"metric must be one of {_METRICS}")
+        if self.generation not in _GENERATION:
+            raise ValueError(f"generation must be one of {_GENERATION}")
+        if not (0.0 <= self.lam <= 1.0):
+            raise ValueError("lambda (slider) must be in [0, 1]")
+
+
+@dataclasses.dataclass
+class PatternStats:
+    pattern: Pattern
+    support: int
+    tau: int
+    frequent: bool
+    embeddings_found: int
+    overflowed: bool
+    blocks_run: int
+
+
+@dataclasses.dataclass
+class MiningResult:
+    frequent: List[Tuple[Pattern, int]]
+    searched: int                       # candidate patterns evaluated (Table 2)
+    per_level: Dict[int, Dict[str, int]]
+    stats: List[PatternStats]
+    elapsed_s: float
+    timed_out: bool
+    peak_device_bytes: int
+
+
+def tau_threshold(sigma: int, lam: float, n_vertices: int) -> int:
+    """Paper Eq. (1): τ = ⌊σ(1 − 1/n)λ + σ/n⌋, clamped to ≥ 1."""
+    n = max(n_vertices, 1)
+    return max(1, math.floor(sigma * (1.0 - 1.0 / n) * lam + sigma / n))
+
+
+def initial_candidates(g: DataGraph) -> List[Pattern]:
+    """CP ← EDGES(G): the size-2 patterns actually present in the graph."""
+    src = np.repeat(np.arange(g.n), np.diff(g.out_indptr))
+    dst = g.out_indices
+    la, lb = g.labels[src], g.labels[dst]
+    pairs = np.unique(np.stack([la, lb], axis=1), axis=0) if src.size else np.zeros((0, 2), int)
+    # reciprocated label pairs (u⇄v exists with these labels)
+    rev_keys = set()
+    if src.size:
+        keys = set(zip(src.tolist(), dst.tolist()))
+        mutual = np.array([(s, d) in keys and (d, s) in keys for s, d in zip(src, dst)])
+        mpairs = np.unique(np.stack([la[mutual], lb[mutual]], axis=1), axis=0) if mutual.any() else np.zeros((0, 2), int)
+        rev_keys = {tuple(p) for p in mpairs.tolist()}
+    out: List[Pattern] = []
+    for a, b in pairs.tolist():
+        adj = np.zeros((2, 2), dtype=bool)
+        adj[0, 1] = True
+        out.append(Pattern(adj, np.array([a, b], np.int32)))
+    for a, b in sorted(rev_keys):
+        adj = np.zeros((2, 2), dtype=bool)
+        adj[0, 1] = adj[1, 0] = True
+        out.append(Pattern(adj, np.array([a, b], np.int32)))
+    return dedupe_patterns(out)
+
+
+def evaluate_pattern(
+    host_g: DataGraph,
+    dev_g: DeviceGraph,
+    pat: Pattern,
+    tau: int,
+    cfg: MiningConfig,
+) -> PatternStats:
+    """Metric step for one candidate: stream root blocks until τ or done."""
+    mcfg = cfg.match
+    plan = make_plan(pat, host_g)
+    k = pat.k
+    n = host_g.n
+    metric = cfg.metric
+    early_exit_tau = jnp.int32(np.iinfo(np.int32).max if cfg.complete else tau)
+
+    if metric in ("mis", "mis_luby"):
+        state = (mis_lib.bitmap_init(n), jnp.int32(0))
+    elif metric == "mni":
+        state = metrics_lib.mni_init(k, n)
+    elif metric == "frac":
+        state = metrics_lib.frac_init(k, n)
+    else:  # mis_exact
+        state = []
+
+    found_total = 0
+    overflowed = False
+    blocks = 0
+    n_blocks = -(-n // mcfg.root_block)
+    for b in range(n_blocks):
+        emb, count, found, ovf = match_block(dev_g, plan, jnp.int32(b * mcfg.root_block), mcfg)
+        blocks += 1
+        found_total += int(found)
+        overflowed |= bool(ovf)
+        if metric == "mis":
+            state = mis_lib.mis_greedy_update(state[0], state[1], emb, count, early_exit_tau, k)
+            if not cfg.complete and int(state[1]) >= tau:
+                break
+        elif metric == "mis_luby":
+            state = mis_lib.mis_luby_update(state[0], state[1], emb, count, early_exit_tau, k, n)
+            if not cfg.complete and int(state[1]) >= tau:
+                break
+        elif metric == "mni":
+            state = metrics_lib.mni_update(state, emb, count, k)
+            if not cfg.complete and int(metrics_lib.mni_value(state)) >= tau:
+                break
+        elif metric == "frac":
+            state = metrics_lib.frac_update(state, emb, count, k)
+        else:  # mis_exact — collect embeddings to host
+            c = int(count)
+            if c:
+                state.append(np.asarray(emb[:c]))
+
+    if metric in ("mis", "mis_luby"):
+        support = int(state[1])
+    elif metric == "mni":
+        support = int(metrics_lib.mni_value(state))
+    elif metric == "frac":
+        support = int(math.floor(float(metrics_lib.frac_value(state))))
+    else:
+        embs = np.concatenate(state, axis=0) if state else np.zeros((0, k), np.int32)
+        support = metrics_lib.exact_mis(embs)
+
+    return PatternStats(
+        pattern=pat,
+        support=support,
+        tau=tau,
+        frequent=support >= tau,
+        embeddings_found=found_total,
+        overflowed=overflowed,
+        blocks_run=blocks,
+    )
+
+
+def _device_bytes(cfg: MiningConfig, k: int, n: int) -> int:
+    mcfg = cfg.match
+    emb = mcfg.cap * k * 4
+    graphless = emb * 2 + mcfg.cap * mcfg.chunk * (k + 8) * 4
+    if cfg.metric in ("mis", "mis_luby"):
+        graphless += ((n + 31) // 32) * 4 + (n * 4 if cfg.metric == "mis_luby" else 0)
+    elif cfg.metric == "mni":
+        graphless += k * n
+    elif cfg.metric == "frac":
+        graphless += k * n * 4
+    return graphless
+
+
+def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
+    """Algorithm 1.  Returns all frequent patterns + the paper's telemetry."""
+    t0 = time.monotonic()
+    dev_g = DeviceGraph.from_host(g)
+    graph_bytes = g.nbytes()
+    frequent: List[Tuple[Pattern, int]] = []
+    all_stats: List[PatternStats] = []
+    per_level: Dict[int, Dict[str, int]] = {}
+    searched = 0
+    peak_bytes = graph_bytes
+    timed_out = False
+
+    cp = initial_candidates(g)
+    label_universe = sorted(set(g.labels.tolist()))
+    searched_keys: set = set()
+    mis_mode = cfg.metric in ("mis", "mis_luby", "mis_exact")
+    level = 0
+
+    while cp:
+        level += 1
+        level_frequent: List[Pattern] = []
+        lvl_searched = 0
+        lvl_pruned = 0
+        for pat in cp:
+            if cfg.time_limit_s is not None and time.monotonic() - t0 > cfg.time_limit_s:
+                timed_out = True
+                break
+            tau = (
+                tau_threshold(cfg.sigma, cfg.lam, pat.k) if mis_mode else cfg.sigma
+            )
+            # paper §3.1.2 vertex bound: a frequent k-pattern needs k·τ
+            # distinct data vertices under the independence property
+            if mis_mode and pat.k * tau > g.n:
+                lvl_pruned += 1
+                continue
+            st = evaluate_pattern(g, dev_g, pat, tau, cfg)
+            searched += 1
+            lvl_searched += 1
+            all_stats.append(st)
+            peak_bytes = max(peak_bytes, graph_bytes + _device_bytes(cfg, pat.k, g.n))
+            if st.frequent:
+                frequent.append((pat, st.support))
+                level_frequent.append(pat)
+        per_level[level] = {
+            "candidates": len(cp),
+            "searched": lvl_searched,
+            "pruned": lvl_pruned,
+            "frequent": len(level_frequent),
+        }
+        if timed_out or not level_frequent:
+            break
+        if cfg.generation == "merge":
+            # merge keeps strict level-wise (k−1 → k) discipline
+            if level_frequent[0].k + 1 > cfg.max_pattern_size:
+                break
+            cp = generate_new_patterns(level_frequent)
+        else:
+            # edge extension mixes vertex counts (that is the paper's point:
+            # same-vertex-count patterns land at different BFS levels)
+            cp = edge_extension_candidates(
+                level_frequent, label_universe, max_k=cfg.max_pattern_size
+            )
+        searched_keys |= {canonical_key(st.pattern) for st in all_stats}
+        cp = [
+            p for p in cp
+            if p.k <= cfg.max_pattern_size and canonical_key(p) not in searched_keys
+        ]
+
+    return MiningResult(
+        frequent=frequent,
+        searched=searched,
+        per_level=per_level,
+        stats=all_stats,
+        elapsed_s=time.monotonic() - t0,
+        timed_out=timed_out,
+        peak_device_bytes=peak_bytes,
+    )

@@ -1,0 +1,281 @@
+"""Data-parallel subgraph matcher — the TPU-native replacement for VF3-Light.
+
+VF3-Light enumerates embeddings with DFS backtracking; here a *frontier
+table* of partial embeddings (a dense ``(cap, k)`` int32 array) advances one
+pattern vertex per level, in lockstep:
+
+  level i:  anchors  = emb[:, anchor_pos[i]]
+            cands    = chunked gather of the anchors' CSR adjacency rows
+            mask     = label ∧ degree ∧ injectivity ∧ edge-checks
+            emb'     = cumsum-compaction of the masked (cap × chunk) grid
+
+Edge-existence checks run a fixed-depth branchless binary search over each
+CSR row (no hash tables, no int64 keys — int32 only, TPU-friendly).
+
+Everything is static-shaped; overflow beyond ``cap`` is *counted* and
+surfaced, never silently dropped.  The host drives root *blocks* through
+``match_block`` and owns early termination (τ reached) — device code is one
+jit-compiled function per pattern size k, reused across all patterns of that
+size (plans are data, not static arguments).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DataGraph, DeviceGraph
+from .plan import PatternPlan
+
+__all__ = ["MatchConfig", "match_block", "edge_exists", "device_graph_tuple"]
+
+
+# Register the graph/plan dataclasses as pytrees so they pass through jit
+# without recompilation per pattern.
+def _dg_flatten(g: DeviceGraph):
+    return (
+        (g.labels, g.out_indptr, g.out_indices, g.in_indptr, g.in_indices),
+        g.n,
+    )
+
+
+def _dg_unflatten(n, children):
+    return DeviceGraph(n, *children)
+
+
+jax.tree_util.register_pytree_node(DeviceGraph, _dg_flatten, _dg_unflatten)
+
+
+def _plan_flatten(p: PatternPlan):
+    arrays = (
+        p.root_label,
+        p.root_min_out,
+        p.root_min_in,
+        p.anchor_pos,
+        p.anchor_out,
+        p.cand_label,
+        p.min_out,
+        p.min_in,
+        p.check_out,
+        p.check_in,
+    )
+    return arrays, (p.k, p.order)
+
+
+def _plan_unflatten(aux, children):
+    k, order = aux
+    return PatternPlan(k, *children, order=order)
+
+
+jax.tree_util.register_pytree_node(PatternPlan, _plan_flatten, _plan_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchConfig:
+    """Static matcher geometry (one jit cache entry per distinct config + k)."""
+
+    cap: int = 8192          # frontier capacity (embeddings per level)
+    root_block: int = 4096   # roots processed per host iteration
+    chunk: int = 64          # neighbors gathered per expansion chunk
+    max_chunks: int = 8      # ceil(max_degree / chunk)
+    bisect_iters: int = 12   # ceil(log2(max_degree + 1))
+    # two-phase expansion (EXPERIMENTS.md §Perf, flexis-mining cell): run the
+    # cheap filters (label/degree/injectivity) on the full (cap × chunk)
+    # grid, compact survivors, and run the edge-existence bisection only on
+    # the compacted lanes — label selectivity pays for the extra compaction.
+    two_phase: bool = False
+
+    @classmethod
+    def for_graph(cls, g: DataGraph, *, cap: int = 8192, root_block: int = 4096,
+                  chunk: int = 64) -> "MatchConfig":
+        """Right-size the geometry to the graph: the frontier capacity and
+        root blocks never usefully exceed the graph scale, and the chunk
+        width never usefully exceeds the max degree."""
+        max_deg = max(g.max_out_degree, g.max_in_degree, 1)
+        chunk = int(min(chunk, 1 << int(np.ceil(np.log2(max_deg + 1)))))
+        root_block = int(min(root_block, max(128, 1 << int(np.ceil(np.log2(g.n))))))
+        cap = int(min(cap, max(1024, 1 << int(np.ceil(np.log2(g.n_edges + 1))))))
+        return cls(
+            cap=cap,
+            root_block=root_block,
+            chunk=chunk,
+            max_chunks=max(1, -(-max_deg // chunk)),
+            bisect_iters=max(2, int(np.ceil(np.log2(max_deg + 1))) + 1),
+            # measured 8–9× matcher speedup at identical results on both
+            # label-rich and label-poor graphs (EXPERIMENTS.md §Perf cell 3)
+            two_phase=True,
+        )
+
+
+def edge_exists(indptr, indices, u, v, n_iters: int):
+    """Branchless bounded binary search: is v in sorted indices[indptr[u]:indptr[u+1]]?
+
+    u, v: int32 arrays (broadcast-compatible). Returns bool array.
+    """
+    lo = indptr[u].astype(jnp.int32)
+    hi = (indptr[u + 1]).astype(jnp.int32)
+    # invariant: answer position (if any) in [lo, hi)
+    for _ in range(n_iters):
+        mid = (lo + hi) >> 1
+        mid_safe = jnp.clip(mid, 0, indices.shape[0] - 1)
+        go_right = (indices[mid_safe] < v) & (lo < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right | (lo >= hi), hi, mid)
+    lo_safe = jnp.clip(lo, 0, indices.shape[0] - 1)
+    found = (lo < indptr[u + 1].astype(jnp.int32)) & (indices[lo_safe] == v)
+    return found
+
+
+def device_graph_tuple(g: DataGraph) -> DeviceGraph:
+    return DeviceGraph.from_host(g)
+
+
+def _degrees(indptr, verts):
+    return (indptr[verts + 1] - indptr[verts]).astype(jnp.int32)
+
+
+def _init_roots(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig):
+    """Root frontier for one block: vertices in [block_start, block_start+R)
+    matching the root's label + degree filters, compacted into (cap, k)."""
+    R, cap, k = cfg.root_block, cfg.cap, plan.k
+    verts = block_start + jnp.arange(R, dtype=jnp.int32)
+    in_range = verts < g.n
+    safe = jnp.clip(verts, 0, g.n - 1)
+    ok = (
+        in_range
+        & (g.labels[safe] == plan.root_label)
+        & (_degrees(g.out_indptr, safe) >= plan.root_min_out)
+        & (_degrees(g.in_indptr, safe) >= plan.root_min_in)
+    )
+    pos = jnp.cumsum(ok) - 1
+    dest = jnp.where(ok & (pos < cap), pos, cap)
+    emb = jnp.full((cap + 1, k), -1, dtype=jnp.int32)
+    emb = emb.at[dest, 0].set(safe, mode="drop")
+    count = jnp.minimum(ok.sum(), cap).astype(jnp.int32)
+    return emb[:cap], count
+
+
+def _expand_level(g: DeviceGraph, plan: PatternPlan, emb, count, level: int,
+                  cfg: MatchConfig):
+    """Extend every partial embedding by pattern-order vertex `level`."""
+    cap, C, k = cfg.cap, cfg.chunk, plan.k
+    i = level  # python int (static): column being filled
+    n_idx = g.out_indices.shape[0]
+    # concatenated adjacency so out/in selection is an offset, not two gathers
+    indices_cat = jnp.concatenate([g.out_indices, g.in_indices])
+
+    anchor_pos = plan.anchor_pos[i]
+    use_out = plan.anchor_out[i]
+    anchors = jnp.take_along_axis(emb, jnp.full((cap, 1), anchor_pos, jnp.int32), axis=1)[:, 0]
+    anchors_safe = jnp.clip(anchors, 0, g.n - 1)
+    out_start = g.out_indptr[anchors_safe].astype(jnp.int32)
+    in_start = g.in_indptr[anchors_safe].astype(jnp.int32)
+    start = jnp.where(use_out, out_start, in_start + n_idx)
+    deg = jnp.where(
+        use_out,
+        _degrees(g.out_indptr, anchors_safe),
+        _degrees(g.in_indptr, anchors_safe),
+    )
+    row_valid = jnp.arange(cap, dtype=jnp.int32) < count
+
+    out_emb0 = jnp.full((cap + 1, k), -1, dtype=jnp.int32)
+
+    def _cheap_mask(cand, cand_safe, in_deg_range):
+        mask = row_valid[:, None] & in_deg_range
+        mask &= g.labels[cand_safe] == plan.cand_label[i]
+        mask &= _degrees(g.out_indptr, cand_safe) >= plan.min_out[i]
+        mask &= _degrees(g.in_indptr, cand_safe) >= plan.min_in[i]
+        for j in range(i):
+            mask &= cand != emb[:, j][:, None]  # injectivity
+        return mask
+
+    def _edge_checks(cand_safe, prev_rows):
+        """prev_rows: (..., k) prefix columns aligned with cand_safe."""
+        ok = jnp.ones(cand_safe.shape, bool)
+        for j in range(i):  # static unroll over prefix
+            prev_safe = jnp.clip(prev_rows[..., j], 0, g.n - 1)
+            co = plan.check_out[i, j]
+            ci = plan.check_in[i, j]
+            ok_out = edge_exists(g.out_indptr, g.out_indices, cand_safe,
+                                 prev_safe, cfg.bisect_iters)
+            ok_in = edge_exists(g.out_indptr, g.out_indices, prev_safe,
+                                cand_safe, cfg.bisect_iters)
+            ok &= jnp.where(co, ok_out, True)
+            ok &= jnp.where(ci, ok_in, True)
+        return ok
+
+    def chunk_body(c, carry):
+        out_emb, out_count, found, ovf = carry
+        off = c * C + jnp.arange(C, dtype=jnp.int32)[None, :]          # (1, C)
+        idx = start[:, None] + off                                     # (cap, C)
+        in_deg_range = off < deg[:, None]
+        cand = indices_cat[jnp.clip(idx, 0, indices_cat.shape[0] - 1)]  # (cap, C)
+        cand_safe = jnp.clip(cand, 0, g.n - 1)
+        mask = _cheap_mask(cand, cand_safe, in_deg_range)
+        src_row_grid = jnp.arange(cap * C, dtype=jnp.int32) // C
+
+        if cfg.two_phase and i > 0:
+            # compact cheap-filter survivors, bisect only those lanes
+            flat = mask.reshape(-1)
+            pos1 = jnp.cumsum(flat).astype(jnp.int32) - 1
+            dest1 = jnp.where(flat & (pos1 < cap), pos1, cap)
+            cand_buf = jnp.zeros((cap + 1,), jnp.int32).at[dest1].set(
+                cand_safe.reshape(-1), mode="drop")[:cap]
+            row_buf = jnp.zeros((cap + 1,), jnp.int32).at[dest1].set(
+                src_row_grid, mode="drop")[:cap]
+            n_phase1 = flat.sum().astype(jnp.int32)
+            n_mid = jnp.minimum(n_phase1, cap)
+            mid_valid = jnp.arange(cap, dtype=jnp.int32) < n_mid
+            prev_rows = emb[row_buf]                                   # (cap, k)
+            ok = mid_valid & _edge_checks(cand_buf, prev_rows)
+            n_new = ok.sum().astype(jnp.int32)
+            pos = jnp.cumsum(ok).astype(jnp.int32) - 1 + out_count
+            dest = jnp.where(ok & (pos < cap), pos, cap)
+            rows = prev_rows.at[:, i].set(cand_buf)
+            out_emb = out_emb.at[dest].set(rows, mode="drop")
+            ovf |= n_phase1 > cap  # phase-1 drop: results may be incomplete
+            return (out_emb, jnp.minimum(out_count + n_new, cap),
+                    found + n_new, ovf)
+
+        mask &= _edge_checks(cand_safe, emb[:, None, :])
+        flat_mask = mask.reshape(-1)
+        n_new = flat_mask.sum().astype(jnp.int32)
+        pos = jnp.cumsum(flat_mask).astype(jnp.int32) - 1 + out_count
+        dest = jnp.where(flat_mask & (pos < cap), pos, cap)
+        rows = emb[src_row_grid].at[:, i].set(cand.reshape(-1))
+        out_emb = out_emb.at[dest].set(rows, mode="drop")
+        return (out_emb, jnp.minimum(out_count + n_new, cap),
+                found + n_new, ovf)
+
+    out_emb, out_count, found, ovf = jax.lax.fori_loop(
+        0, cfg.max_chunks, chunk_body,
+        (out_emb0, jnp.int32(0), jnp.int32(0), jnp.bool_(False)),
+    )
+    return out_emb[:cap], out_count, found, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def match_block(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Enumerate embeddings rooted in one vertex block.
+
+    Returns (emb, count, found, overflowed):
+      emb:    (cap, k) int32 — embeddings in pattern-order columns, row-major
+              in (root, discovery) order (so row index = greedy priority).
+      count:  rows of `emb` that are valid (≤ cap).
+      found:  total embeddings enumerated before capacity clipping.
+      overflowed: bool — some level produced more than `cap` rows.
+    """
+    emb, count = _init_roots(g, plan, block_start, cfg)
+    found = count
+    overflowed = jnp.bool_(False)
+    for level in range(1, plan.k):
+        emb, count, lvl_found, lvl_ovf = _expand_level(
+            g, plan, emb, count, level, cfg)
+        overflowed |= lvl_ovf | (lvl_found > cfg.cap)
+        found = lvl_found
+    return emb, count, found, overflowed

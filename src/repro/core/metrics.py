@@ -1,0 +1,198 @@
+"""Support metrics: MNI, Fractional-score, exact MIS, plus host oracles.
+
+The device-side updates consume the matcher's embedding blocks; the exact
+MIS (NP-hard, gold standard) runs on the host over the materialized conflict
+graph and is used by tests/benchmarks only — precisely how the paper treats
+it (§2.4: accurate but too expensive for production).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DataGraph
+from .pattern import Pattern
+
+__all__ = [
+    "mni_init",
+    "mni_update",
+    "mni_value",
+    "frac_init",
+    "frac_update",
+    "frac_value",
+    "exact_mis",
+    "greedy_mis_host",
+    "enumerate_embeddings_host",
+]
+
+
+# ---------------------------------------------------------------------------
+# MNI (GraMi / T-FSM-MNI): per-pattern-vertex distinct image counts, min.
+# ---------------------------------------------------------------------------
+
+def mni_init(k: int, n: int) -> jnp.ndarray:
+    """(k, n) bool image table — images[v, d] ⇔ some embedding maps v → d."""
+    return jnp.zeros((k, n), dtype=jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mni_update(images: jnp.ndarray, emb: jnp.ndarray, n_valid: jnp.ndarray, k: int):
+    cap = emb.shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    vs = jnp.clip(emb[:, :k], 0, None)  # (cap, k)
+    rows = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, :], vs.shape)
+    # scatter-OR: max of bools, masked rows contribute False (no erase)
+    return images.at[rows, vs].max(valid[:, None])
+
+
+@jax.jit
+def mni_value(images: jnp.ndarray) -> jnp.ndarray:
+    return jnp.min(jnp.sum(images, axis=1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fractional-score (T-FSM): down-weight contested data vertices.
+#
+# Our formulation (documented variant, DESIGN.md §6): count c[v, d] =
+# #embeddings mapping pattern vertex v to data vertex d; a data vertex d's
+# total load t[d] = Σ_v c[v, d]; the fractional image mass of v is
+# Σ_d c[v, d] / t[d] (each data vertex distributes one unit of support among
+# the embeddings contesting it).  Support = min_v mass(v).  Properties kept
+# from T-FSM: ≤ MNI always; = MNI when no data vertex is shared.
+# ---------------------------------------------------------------------------
+
+def frac_init(k: int, n: int) -> jnp.ndarray:
+    return jnp.zeros((k, n), dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def frac_update(counts: jnp.ndarray, emb: jnp.ndarray, n_valid: jnp.ndarray, k: int):
+    cap = emb.shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    vs = jnp.clip(emb[:, :k], 0, None)
+    rows = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, :], vs.shape)
+    return counts.at[rows, vs].add(valid[:, None].astype(jnp.float32))
+
+
+@jax.jit
+def frac_value(counts: jnp.ndarray) -> jnp.ndarray:
+    total = jnp.sum(counts, axis=0, keepdims=True)  # (1, n)
+    share = jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
+    return jnp.min(jnp.sum(share, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Exact MIS over the embedding conflict graph (host, branch & bound).
+# ---------------------------------------------------------------------------
+
+def _conflict_adj(embs: np.ndarray) -> List[int]:
+    """Bitmask adjacency of the conflict graph (embeddings sharing a vertex)."""
+    m = embs.shape[0]
+    adj = [0] * m
+    sets = [frozenset(row.tolist()) for row in embs]
+    for i in range(m):
+        for j in range(i + 1, m):
+            if sets[i] & sets[j]:
+                adj[i] |= 1 << j
+                adj[j] |= 1 << i
+    return adj
+
+
+def exact_mis(embs: np.ndarray, limit: int = 10**7) -> int:
+    """Maximum independent set size of the embedding conflict graph.
+
+    Branch and bound with greedy lower bound + remaining-count upper bound.
+    `limit` caps explored nodes (raises if exceeded — tests use small sets).
+    """
+    embs = np.asarray(embs)
+    m = embs.shape[0]
+    if m == 0:
+        return 0
+    if m > 60:
+        # group identical-vertex-set duplicates first
+        uniq = {tuple(sorted(r.tolist())) for r in embs}
+        embs = np.array(sorted(uniq))
+        m = embs.shape[0]
+        if m > 60:
+            raise ValueError(f"exact MIS limited to 60 embeddings, got {m}")
+    adj = _conflict_adj(embs)
+    full = (1 << m) - 1
+    best = 0
+    nodes = 0
+
+    def bb(avail: int, size: int):
+        nonlocal best, nodes
+        nodes += 1
+        if nodes > limit:
+            raise RuntimeError("exact_mis node limit exceeded")
+        if size + bin(avail).count("1") <= best:
+            return
+        if avail == 0:
+            best = max(best, size)
+            return
+        v = (avail & -avail).bit_length() - 1  # lowest set bit
+        # branch 1: take v
+        bb(avail & ~adj[v] & ~(1 << v), size + 1)
+        # branch 2: skip v
+        bb(avail & ~(1 << v), size)
+
+    bb(full, 0)
+    return best
+
+
+def greedy_mis_host(embs: np.ndarray) -> List[int]:
+    """Lexicographically-first maximal independent set (host oracle)."""
+    used: set = set()
+    picked = []
+    for i, row in enumerate(np.asarray(embs)):
+        vs = set(int(v) for v in row)
+        if not (vs & used):
+            used |= vs
+            picked.append(i)
+    return picked
+
+
+# ---------------------------------------------------------------------------
+# Brute-force embedding enumeration (host oracle for matcher tests).
+# ---------------------------------------------------------------------------
+
+def enumerate_embeddings_host(g: DataGraph, pat: Pattern, cap: int = 10**6) -> np.ndarray:
+    """All injective label/edge-preserving mappings pattern → data graph.
+
+    Subgraph-isomorphism semantics per the paper §2.1.4: pattern edges must
+    exist in the data graph; extra data-graph edges between images are fine.
+    Returns (M, k) int32 rows ordered lexicographically by image tuple.
+    """
+    k = pat.k
+    cands = [np.nonzero(g.labels == pat.labels[v])[0] for v in range(k)]
+    out: List[Tuple[int, ...]] = []
+
+    def extend(partial: List[int]):
+        i = len(partial)
+        if i == k:
+            out.append(tuple(partial))
+            return
+        for d in cands[i]:
+            d = int(d)
+            if d in partial:
+                continue
+            ok = True
+            for j in range(i):
+                if pat.adj[j, i] and not g.has_edge(partial[j], d):
+                    ok = False
+                    break
+                if pat.adj[i, j] and not g.has_edge(d, partial[j]):
+                    ok = False
+                    break
+            if ok:
+                extend(partial + [d])
+                if len(out) >= cap:
+                    raise RuntimeError("embedding cap exceeded")
+
+    extend([])
+    return np.array(out, dtype=np.int32).reshape(-1, k)

@@ -1,0 +1,78 @@
+"""EmbeddingBag — Pallas TPU kernel (the RecSys lookup hot path).
+
+The table stays in HBM (`memory_space=ANY`); bag indices arrive via scalar
+prefetch (SMEM) so each grid step can DMA exactly the `hots` rows it needs
+into a VMEM scratch row and reduce them there.  One grid step = one block of
+bags; per bag the kernel issues `hots` dynamic-slice copies (HBM→VMEM) and
+accumulates — the classic FBGEMM-style gather-reduce reshaped for the TPU
+DMA engine (contiguous (1, D) row copies, D lane-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, row_scr, sem, *,
+                bags_per_block: int, hots: int, mean: bool):
+    g = pl.program_id(0)
+
+    def bag_body(b, _):
+        acc = jnp.zeros_like(row_scr)
+        cnt = jnp.int32(0)
+
+        def hot_body(h, carry):
+            acc, cnt = carry
+            raw = idx_ref[(g * bags_per_block + b) * hots + h]
+            valid = raw >= 0
+            row = jnp.maximum(raw, 0)
+            copy = pltpu.make_async_copy(
+                table_ref.at[pl.ds(row, 1)], row_scr.at[:], sem)
+            copy.start()
+            copy.wait()
+            acc = acc + jnp.where(valid, row_scr[...], 0.0)
+            return acc, cnt + valid.astype(jnp.int32)
+
+        acc, cnt = jax.lax.fori_loop(0, hots, hot_body, (acc, cnt))
+        if mean:
+            acc = acc / jnp.maximum(cnt, 1).astype(acc.dtype)
+        out_ref[b] = acc[0].astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bags_per_block, bag_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "bags_per_block",
+                                             "interpret"))
+def embedding_bag_pallas(table: jnp.ndarray, idx: jnp.ndarray, *,
+                         combiner: str = "sum", bags_per_block: int = 64,
+                         interpret: bool = False) -> jnp.ndarray:
+    """table: (R, D) f32; idx: (B, H) int32 (pad = -1) → (B, D)."""
+    R, D = table.shape
+    B, H = idx.shape
+    bags_per_block = min(bags_per_block, B)
+    assert B % bags_per_block == 0
+    n_blocks = B // bags_per_block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],     # table in HBM
+        out_specs=pl.BlockSpec((bags_per_block, D), lambda g, idx: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), table.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_bag_kernel, bags_per_block=bags_per_block,
+                               hots=H, mean=(combiner == "mean"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(idx.reshape(-1), table)

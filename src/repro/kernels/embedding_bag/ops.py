@@ -1,0 +1,12 @@
+"""Public wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+from .kernel import embedding_bag_pallas
+
+
+def embedding_bag(table, idx, *, combiner: str = "sum",
+                  bags_per_block: int = 64, interpret: bool = True):
+    """interpret=True default for this CPU container; False on TPU."""
+    return embedding_bag_pallas(table, idx, combiner=combiner,
+                                bags_per_block=bags_per_block,
+                                interpret=interpret)

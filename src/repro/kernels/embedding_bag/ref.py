@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      *, combiner: str = "sum") -> jnp.ndarray:
+    """table: (R, D); idx: (B, H) int32, pad = -1 → (B, D)."""
+    mask = idx >= 0
+    rows = jnp.take(table, jnp.maximum(idx, 0), axis=0)
+    rows = jnp.where(mask[..., None], rows, 0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+    return out

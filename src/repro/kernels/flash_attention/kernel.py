@@ -1,0 +1,119 @@
+"""Blocked causal flash attention — Pallas TPU kernel.
+
+Grid (B·H, S/bq, S/bk); the innermost k-axis is sequential on TPU, so the
+online-softmax state (m, l, acc) lives in VMEM scratch and persists across
+k-steps.  GQA is handled by mapping query head h → kv head h // G inside the
+BlockSpec index maps (no KV broadcast through HBM).  Causal/window-dead
+blocks are skipped with @pl.when — the block never leaves HBM.
+
+VMEM working set per step = q(bq·hd) + k(bk·hd) + v(bk·hd) + acc(bq·hd)
+(+ scores bq·bk), all fp32 ≤ ~2 MB at the default 256/512 tiling — well
+inside the 16 MB/core budget, with MXU-aligned (multiple-of-128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 bq: int, bk: int, nk: int, scale: float,
+                 causal: bool, window: Optional[int],
+                 softcap: Optional[float]):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level liveness: any (query, key) pair unmasked?
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window is not None:
+        live = live & (q_start - (k_start + bk - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, softcap=None,
+                         bq=256, bk=512, interpret=False):
+    """q: (BH, S, hd); k/v: (BKV, S, hd); head i reads kv row i // G."""
+    BH, S, hd = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, "S must divide block sizes"
+    nq, nk = S // bq, S // bk
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, nk=nk, scale=1.0 / np.sqrt(hd),
+        causal=causal, window=window, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i // G, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda i, qi, ki: (i // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

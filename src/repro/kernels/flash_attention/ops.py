@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the flash-attention kernel (GQA layout glue)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, bq: int = 256,
+                    bk: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) → (B, S, H, hd).
+
+    Forward-only (serving / fwd benches); the differentiable train path uses
+    the chunked-jnp oracle in `repro.models.attention`.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               softcap=softcap, bq=bq, bk=bk,
+                               interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, window,
+softcap). Shapes: q (B, S, H, hd); k/v (B, S, KV, hd) with H % KV == 0."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    if softcap is not None:
+        s = softcap_ * jnp.tanh(s / softcap_) if (softcap_ := softcap) else s
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Public wrapper for the gather-aggregate kernel + CSR→padded helper."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import gather_aggregate_pallas
+
+
+def pad_adjacency(indptr: np.ndarray, indices: np.ndarray, d_max: int
+                  ) -> np.ndarray:
+    """CSR → (N, d_max) padded neighbor table (pad = -1, degree-capped)."""
+    n = indptr.shape[0] - 1
+    out = np.full((n, d_max), -1, np.int32)
+    for v in range(n):
+        row = indices[indptr[v]:indptr[v + 1]][:d_max]
+        out[v, : row.shape[0]] = row
+    return out
+
+
+def gather_aggregate(features, nbrs, *, mean: bool = False,
+                     block_nodes: int = 256, interpret: bool = True):
+    """interpret=True default for this CPU container; False on TPU."""
+    return gather_aggregate_pallas(features, nbrs, mean=mean,
+                                   block_nodes=block_nodes,
+                                   interpret=interpret)

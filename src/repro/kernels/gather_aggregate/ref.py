@@ -1,0 +1,19 @@
+"""Oracle for the gather-aggregate (padded-neighbor SpMM) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_aggregate_ref(features: jnp.ndarray, nbrs: jnp.ndarray, *,
+                         mean: bool = False) -> jnp.ndarray:
+    """features: (N, F); nbrs: (N, Dmax) int32 (pad = -1) → (N, F).
+
+    out[i] = Σ_j features[nbrs[i, j]]  (masked), optionally degree-mean.
+    """
+    mask = nbrs >= 0
+    rows = jnp.take(features, jnp.maximum(nbrs, 0), axis=0)  # (N, Dmax, F)
+    rows = jnp.where(mask[..., None], rows, 0)
+    out = rows.sum(axis=1)
+    if mean:
+        out = out / jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+    return out

@@ -1,0 +1,21 @@
+"""Public wrapper: drop-in replacement for `mis_greedy_update`."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import mis_bitmap_select
+
+
+def mis_greedy_update_kernel(bitmap, count, emb, n_valid, tau, k: int,
+                             *, interpret: bool = True):
+    """Same signature/result as repro.core.mis.mis_greedy_update.
+
+    interpret=True by default (this container is CPU); pass False on TPU.
+    """
+    cap = emb.shape[0]
+    block = 256
+    while cap % block:
+        block //= 2
+    return mis_bitmap_select(bitmap, count, emb, jnp.int32(n_valid),
+                             jnp.int32(tau), k=k, block_rows=max(block, 1),
+                             interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle for the mIS bitmap kernel = the production jnp implementation."""
+from repro.core.mis import bitmap_init, mis_greedy_update
+
+
+def mis_bitmap_ref(bitmap, count, emb, n_valid, tau, k):
+    """Greedy lexicographic maximal-independent-set selection (jnp scan)."""
+    return mis_greedy_update(bitmap, count, emb, n_valid, tau, k)

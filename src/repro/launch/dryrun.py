@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+    jit(step).lower(abstract inputs).compile()
+on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, recording
+  * memory_analysis()  — proves the cell fits per-chip HBM,
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the partitioned HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_arch, list_archs
+from repro.launch.mesh import make_production_mesh, mesh_device_count
+from repro.models.sharding import use_rules
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the partitioned HLO.
+
+    HLO after SPMD partitioning is the per-device program, so these are
+    per-device bytes moved (the `collective term` numerator).
+    `*-start` / `*-done` pairs are counted once (the start op carries the
+    shape).
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        op = None
+        for c in _COLLECTIVES:
+            if rhs.startswith(c) or re.match(rf"\(?[\w\[\],\s{{}}]*\)?\s*{c}\(", rhs) \
+               or f" {c}(" in f" {rhs}" or rhs.split("(")[0].strip().startswith(c):
+                op = c
+                break
+        if op is None:
+            continue
+        head = rhs.split("(")[0]
+        if head.strip().endswith("-done"):
+            continue  # counted at -start
+        # result types live on the lhs for HLO text: "%name = TYPE op(...)"
+        # but jax prints "name = TYPE op(...)"; TYPE tokens precede op name in rhs?
+        # In XLA text: "%x = f32[8,128]{1,0} all-reduce(...)" — the type is in
+        # rhs before the op name. Extract types from rhs up to the op name.
+        type_part = rhs.split(op)[0]
+        total = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(type_part))
+        if total == 0:
+            # fallback: look at lhs (some printers place the type there)
+            total = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(lhs))
+        out[op] += total
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _filter_spec(spec: P, mesh: Mesh) -> P:
+    names = set(mesh.axis_names)
+    parts = []
+    for part in spec:
+        if part is None:
+            parts.append(None)
+        elif isinstance(part, (tuple, list)):
+            kept = tuple(p for p in part if p in names)
+            parts.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            parts.append(part if part in names else None)
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, part) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(part, (tuple, list)):
+        n = 1
+        for p in part:
+            n *= sizes.get(p, 1)
+        return n
+    return sizes.get(part, 1)
+
+
+def _fix_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """If a spec axis doesn't divide its dim, relocate it to the last dim
+    that does (e.g. mixtral's 8 experts on a 16-way model axis → shard the
+    expert FFN dim instead: EP degrades to within-expert TP)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, part) in enumerate(zip(shape, parts)):
+        if part is None or dim % _axis_size(mesh, part) == 0:
+            continue
+        parts[i] = None
+        for j in reversed(range(len(shape))):
+            if j != i and parts[j] is None and shape[j] % _axis_size(mesh, part) == 0 \
+               and shape[j] >= _axis_size(mesh, part):
+                parts[j] = part
+                break
+    return P(*parts)
+
+
+def _shard(tree_specs, mesh: Mesh, abstract_tree=None):
+    if abstract_tree is None:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, _filter_spec(s, mesh)),
+            tree_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    specs_flat, treedef = jax.tree_util.tree_flatten(
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+    abs_flat = treedef.flatten_up_to(abstract_tree)
+    out = [
+        NamedSharding(mesh, _fix_divisibility(
+            _filter_spec(s, mesh), tuple(a.shape), mesh))
+        for s, a in zip(specs_flat, abs_flat)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _opt_pspecs_zero1(arch, shape: str, mesh: Mesh):
+    """ZeRO-1: AdamW moments additionally sharded along the data axis."""
+    from repro.train.optimizer import AdamWState, zero1_specs
+
+    ps = arch.param_pspecs(shape)
+    pabs = arch.abstract_params(shape)
+    mom = zero1_specs(ps, pabs, data_axes=("data",), mesh=mesh)
+    return AdamWState(step=P(), mu=mom, nu=mom)
+
+
+def _measure(arch, shape: str, mesh: Mesh, *, donate: bool = True,
+             zero1: bool = True, save_hlo: Optional[Path] = None
+             ) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh); raw measurement record."""
+    kind = arch.shapes()[shape].kind
+    step = arch.step_fn(shape)
+    t0 = time.monotonic()
+
+    params_abs = arch.abstract_params(shape)
+    param_sh = _shard(arch.param_pspecs(shape), mesh, params_abs)
+    inputs = arch.input_specs(shape)
+    input_sh = _shard(arch.input_pspecs(shape), mesh, inputs)
+
+    args: List[Any] = [params_abs]
+    shardings: List[Any] = [param_sh]
+    opt_sh = None
+    if kind == "train":
+        opt_abs = arch.abstract_opt(shape)
+        opt_specs = (_opt_pspecs_zero1(arch, shape, mesh) if zero1
+                     else arch.opt_pspecs(shape))
+        opt_sh = _shard(opt_specs, mesh, opt_abs)
+        args.append(opt_abs)
+        shardings.append(opt_sh)
+    for key, spec in inputs.items():
+        args.append(spec)
+        shardings.append(input_sh[key])
+
+    if kind == "train":
+        out_shardings = (NamedSharding(mesh, P()), param_sh, opt_sh)
+        donate_argnums = (0, 1) if donate else ()
+    elif kind == "decode":
+        out_shardings = (NamedSharding(mesh, P()), input_sh["cache"])
+        donate_argnums = (1,) if donate else ()
+    else:
+        out_shardings = None
+        donate_argnums = ()
+
+    with use_rules(mesh):
+        jitted = jax.jit(step, in_shardings=tuple(shardings),
+                         out_shardings=out_shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    compile_s = time.monotonic() - t0
+    record: Dict[str, Any] = {
+        "kind": kind, "status": "ok",
+        "devices": mesh_device_count(mesh),
+        "compile_seconds": round(compile_s, 1),
+    }
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        args_b = record["memory"].get("argument_size_in_bytes", 0)
+        alias_b = record["memory"].get("alias_size_in_bytes", 0)
+        out_b = record["memory"].get("output_size_in_bytes", 0)
+        tmp_b = record["memory"].get("temp_size_in_bytes", 0)
+        record["memory"]["per_device_total_bytes"] = (
+            args_b + tmp_b + max(out_b - alias_b, 0))
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": repr(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost"] = {
+            "flops": float(cost.get("flops", -1)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            "transcendentals": float(cost.get("transcendentals", -1)),
+        }
+    except Exception as e:  # pragma: no cover
+        record["cost"] = {"error": repr(e)}
+
+    hlo = compiled.as_text()
+    record["collectives"] = collective_bytes_from_hlo(hlo)
+    if save_hlo:
+        save_hlo.parent.mkdir(parents=True, exist_ok=True)
+        save_hlo.write_text(hlo)
+        record["hlo_path"] = str(save_hlo)
+    return record
+
+
+def dryrun_cell(arch_name: str, shape: str, *, multi_pod: bool = False,
+                save_hlo: Optional[Path] = None, donate: bool = True,
+                calibrate: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; §Dry-run/§Roofline record.
+
+    For scanned LM stacks, a second *unrolled 2-step* lowering calibrates
+    the while-loop once-counting of XLA cost analysis (see LMArch
+    .calibration_arch): body = U2 − S per metric, corrected = S +
+    (n_steps − 1) × body, applied to flops / bytes / transcendentals /
+    per-collective bytes.  Peak memory is NOT corrected (loops reuse
+    buffers; the scanned number is the true one).
+    """
+    arch = get_arch(arch_name)
+    skip = arch.skip_reason(shape)
+    base = {"arch": arch_name, "shape": shape,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "multi_pod": multi_pod}
+    if skip:
+        return {**base, "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {**base, **_measure(arch, shape, mesh, donate=donate,
+                                 save_hlo=save_hlo)}
+    record["model_flops"] = float(arch.model_flops(shape))
+
+    if calibrate and hasattr(arch, "calibration_arch"):
+        try:
+            cal = _measure(arch.calibration_arch(), shape, mesh,
+                           donate=donate)
+            n = arch.scan_steps
+            record["calibration"] = {
+                "u2_cost": cal.get("cost"),
+                "u2_collectives": cal.get("collectives"),
+                "scan_steps": n,
+            }
+
+            def corr(s_val, u_val):
+                body = max(u_val - s_val, 0.0)
+                return s_val + (n - 1) * body
+
+            c_s, c_u = record.get("cost", {}), cal.get("cost", {})
+            if "flops" in c_s and "flops" in c_u:
+                record["cost_corrected"] = {
+                    k: corr(c_s[k], c_u[k])
+                    for k in ("flops", "bytes_accessed", "transcendentals")
+                    if c_s.get(k, -1) >= 0 and c_u.get(k, -1) >= 0
+                }
+            col_s, col_u = record.get("collectives", {}), cal.get("collectives", {})
+            record["collectives_corrected"] = {
+                k: corr(float(col_s.get(k, 0)), float(col_u.get(k, 0)))
+                for k in _COLLECTIVES + ("total",)
+            }
+        except Exception as e:  # calibration is best-effort
+            record["calibration"] = {"error": repr(e)}
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch_name in archs:
+        arch = get_arch(arch_name)
+        shapes = list(arch.shapes()) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch_name}__{shape}__{'mp' if mp else 'sp'}"
+                try:
+                    rec = dryrun_cell(
+                        arch_name, shape, multi_pod=mp,
+                        save_hlo=(out_dir / f"{tag}.hlo.txt")
+                        if args.save_hlo else None)
+                except Exception as e:
+                    rec = {"arch": arch_name, "shape": shape, "multi_pod": mp,
+                           "status": "FAILED", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+                status = rec["status"]
+                mem = rec.get("memory", {}).get("per_device_total_bytes")
+                mem_s = f" mem/dev={mem/2**30:.2f}GiB" if mem else ""
+                coll = rec.get("collectives", {}).get("total")
+                coll_s = f" coll/dev={coll/2**20:.1f}MiB" if coll is not None else ""
+                print(f"[dryrun] {tag}: {status}{mem_s}{coll_s}", flush=True)
+                if status == "FAILED":
+                    print(rec.get("error", ""), flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Roofline analysis (deliverable g) — consumes the dry-run JSON records.
+
+Per (arch × shape × mesh):
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_device / HBM_bw              [s]
+    collective = collective_bytes_per_device / link_bw      [s]
+
+cost_analysis() of the SPMD-partitioned executable is *per device*, so the
+given formulas' global numerators over (chips × peak) reduce to these.
+MODEL_FLOPS (6·N·D etc., analytic, global) / (chips × HLO_FLOPs) measures
+how much compiled compute is useful — remat/dispatch waste shows here.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+# TPU v5e targets (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+__all__ = ["analyze_record", "load_records", "roofline_table", "PEAK_FLOPS",
+           "HBM_BW", "LINK_BW"]
+
+
+def load_records(dir_: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(str(Path(dir_) / "*.json"))):
+        try:
+            recs.append(json.loads(Path(f).read_text()))
+        except Exception:
+            pass
+    return [r for r in recs if isinstance(r, dict) and "arch" in r]
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    # prefer scan-trip-count-corrected costs (see dryrun_cell calibration)
+    cost = rec.get("cost_corrected") or rec.get("cost", {})
+    colls = rec.get("collectives_corrected") or rec.get("collectives", {})
+    flops_dev = cost.get("flops", -1)
+    bytes_dev = cost.get("bytes_accessed", -1)
+    coll_dev = colls.get("total", 0)
+    chips = rec.get("devices", 256)
+    if flops_dev is None or flops_dev < 0:
+        return None
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = max(bytes_dev, 0) / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_global = flops_dev * chips
+    useful = model_flops / hlo_global if hlo_global > 0 else 0.0
+    bound = max(terms.values())
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    frac = ideal / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec.get("mesh"),
+        "kind": rec.get("kind"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "mem_per_device_bytes": rec.get("memory", {}).get(
+            "per_device_total_bytes"),
+        "compile_s": rec.get("compile_seconds"),
+    }
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) / push more FLOPs to bf16 MXU tiles",
+    "memory": "fuse elementwise chains, shrink activation dtypes, improve layout reuse",
+    "collective": "reshard to cut gathers (SP/TP boundaries), overlap via async collectives, compress DP grads",
+}
+
+
+def roofline_table(recs: List[Dict], *, mesh: str = "16x16") -> str:
+    rows = [a for r in recs if (a := analyze_record(r)) and a["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        f"### Roofline — mesh {mesh} (per-device terms, v5e: 197 TF/s bf16, "
+        f"819 GB/s HBM, 50 GB/s link)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful/HLO | roofline frac | move-it-down |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{_SUGGEST[r['dominant']]} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    recs = load_records(args.dir)
+    print(roofline_table(recs, mesh=args.mesh))
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    if skipped:
+        print("\nDocumented skips:")
+        for r in skipped:
+            print(f"  - {r['arch']} × {r['shape']}: {r['reason']}")
+    if args.json_out:
+        rows = [a for r in recs if (a := analyze_record(r))]
+        Path(args.json_out).write_text(json.dumps(rows, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Training launcher — end-to-end driver (deliverable b).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 200 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ckpt
+
+Full production flow: mesh → sharded params/opt → data pipeline →
+jit'd train step (loss+grad+AdamW, remat, bf16) → async checkpoints +
+heartbeat + straggler guard + auto-resume.  `--reduced` runs the smoke
+config end-to-end on CPU; the same code path drives the full config on a
+real pod (the dry-run proves those shardings compile).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.data.synthetic import dlrm_batches, token_stream
+from repro.launch.mesh import make_mesh_for_devices
+from repro.models.sharding import use_rules
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import HeartbeatFile, StepGuard, StragglerTimeout
+from repro.train.optimizer import adamw_init
+
+
+def train_lm(arch, args) -> int:
+    cfg = arch.reduced_cfg if args.reduced else arch.cfg
+    mesh = make_mesh_for_devices(model_parallel=args.model_parallel)
+    from repro.models.transformer import transformer_init
+    from repro.train.optimizer import AdamWConfig, adamw_update
+    from repro.models.transformer import lm_loss
+
+    opt_cfg = dataclasses.replace(arch.opt, total_steps=args.steps,
+                                  warmup_steps=max(args.steps // 20, 1))
+
+    def step_fn(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, targets)
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return loss, params, opt_state
+
+    with use_rules(mesh):
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        ckpt_dir = Path(args.ckpt_dir)
+        hb = HeartbeatFile(ckpt_dir / "heartbeat")
+
+        params_abs = jax.eval_shape(
+            lambda: transformer_init(jax.random.key(args.seed), cfg))
+        start_step = 0
+        extra = {}
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            (params, opt_state), extra, got = ckpt.restore(
+                ckpt_dir, (params_abs, jax.eval_shape(adamw_init, params_abs)))
+            start_step = got + 1
+            print(f"[train] resumed from step {got}")
+        else:
+            params = transformer_init(jax.random.key(args.seed), cfg)
+            opt_state = adamw_init(params)
+
+        stream = token_stream(cfg.vocab, args.batch, args.seq,
+                              seed=args.seed,
+                              start_step=int(extra.get("data_step", start_step)))
+        t0 = time.monotonic()
+        losses = []
+        for step in range(start_step, args.steps):
+            tokens, targets = next(stream)
+            try:
+                with StepGuard(args.step_budget_s):
+                    loss, params, opt_state = jit_step(
+                        params, opt_state, jnp.asarray(tokens),
+                        jnp.asarray(targets))
+                    loss = float(loss)
+            except StragglerTimeout:
+                print(f"[train] step {step} straggled; checkpoint-restart")
+                ckpt.save(ckpt_dir, step - 1, (params, opt_state),
+                          extra={"data_step": step})
+                return 75  # conventional tempfail → scheduler restarts us
+            losses.append(loss)
+            hb.beat(step)
+            if step % args.ckpt_every == args.ckpt_every - 1:
+                ckpt.save_async(ckpt_dir, step, (params, opt_state),
+                                extra={"data_step": step + 1})
+            if step % args.log_every == 0:
+                dt = time.monotonic() - t0
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"({dt / max(step - start_step + 1, 1):.2f}s/step)",
+                      flush=True)
+        ckpt.wait_pending()
+        ckpt.save(ckpt_dir, args.steps - 1, (params, opt_state),
+                  extra={"data_step": args.steps})
+        print(f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
+        return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--step-budget-s", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if arch.family != "lm":
+        raise SystemExit("train.py drives LM archs; see examples/ for GNN/recsys")
+    return train_lm(arch, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,267 @@
+"""Grouped-query attention — covers every assigned LM arch's variant:
+
+  * GQA / MQA (kv_heads ≤ heads)                  [all five]
+  * qk-norm (RMS over head_dim)                   [qwen3, qwen3-moe]
+  * attention-logit softcap                        [gemma2]
+  * sliding-window masks, local/global alternation [gemma2, mixtral]
+  * RoPE positions, bf16 compute, fp32 softmax
+
+Train path (full sequence, causal) and decode path (single step against a
+static KV cache).  The Pallas flash kernel (`repro.kernels.flash_attention`)
+is a drop-in for the train path on TPU; the jnp path below is the oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    apply_rope,
+    dense_apply,
+    dense_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    rotary_embedding,
+    softcap,
+)
+from .sharding import constrain, current_mesh, _axis_size
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _tp_attention(n_heads: int) -> bool:
+    """TP (head-sharded) attention when heads divide the model axis;
+    otherwise SP (sequence-sharded) attention. Decided at trace time.
+
+    REPRO_ATTN_MODE=sp forces the SP path (perf experiment H1: keep the
+    residual stream seq-sharded through attention and gather the small GQA
+    K/V instead of the full activations)."""
+    import os
+
+    if os.environ.get("REPRO_ATTN_MODE") == "sp":
+        return False
+    mesh = current_mesh()
+    if mesh is None:
+        return True
+    return n_heads % _axis_size(mesh, "model") == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_base: float = 10000.0
+    qk_norm: bool = False
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None        # sliding-window size (None = full)
+    use_flash: bool = False             # route train path through Pallas
+
+
+def attention_init(rng, cfg: AttentionConfig) -> Params:
+    ks = jax.random.split(rng, 5)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kv * hd),
+        "wv": dense_init(ks[2], d, kv * hd),
+        "wo": dense_init(ks[3], h * hd, d, scale=1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(params, cfg: AttentionConfig, x, positions):
+    """x: (B, S, D) → q (B,S,H,hd), k/v (B,S,KV,hd), with RoPE + qk-norm."""
+    B, S, _ = x.shape
+    q = dense_apply(params["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = dense_apply(params["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = dense_apply(params["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+    cos, sin = rotary_embedding(positions, cfg.head_dim, cfg.rope_base)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if _tp_attention(cfg.n_heads):
+        # Megatron-TP region: heads sharded, sequence gathered (the guard in
+        # `constrain` drops the kv-head axis when kv < model axis size)
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+    else:
+        # SP attention: sequence stays sharded, heads replicated (24-head
+        # minitron on a 16-way model axis), K/V gathered for the contraction
+        q = constrain(q, "batch", "residual", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _mask(S: int, window: Optional[int]) -> jnp.ndarray:
+    """(S, S) bool causal (optionally windowed) mask — True = attend."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m
+
+
+def _attn_chunked(q, k, v, cfg: AttentionConfig, q_chunk: int, kv_chunk: int
+                  ) -> jnp.ndarray:
+    """Blockwise (flash-style) attention in pure jnp — O(S·kv_chunk) memory.
+
+    Only the KV axis is chunked (a sequential `lax.scan` with running
+    max/sum/acc).  The query axis stays *spatial*, so under SPMD it remains
+    sharded and every chip works on every scan step — chunking q with a scan
+    would serialize the mesh.  This is both the memory-feasible lowering for
+    the 32k/500k cells and the oracle for the Pallas kernel. `q_chunk` is
+    accepted for API compatibility (unused).
+    """
+    del q_chunk
+    B, S, KV, hd = k.shape
+    H = q.shape[2]
+    groups = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    nk = -(-S // kv_chunk)
+    qg = q.reshape(B, S, KV, groups, hd)
+    kr = jnp.moveaxis(k.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    q_pos = jnp.arange(S)
+
+    def kv_block(carry, xs):
+        m, l, acc = carry
+        ki, kb, vb = xs
+        k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qg, kb).astype(jnp.float32)
+        s *= scale
+        s = softcap(s, cfg.logit_softcap)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if cfg.window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqt,btkh->bkgqh", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, groups, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, groups, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, groups, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                  (jnp.arange(nk), kr, vr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.einsum("bkgqh->bqkgh", out).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def mha_train(params: Params, cfg: AttentionConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, impl: str = "dense",
+              q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Full-sequence causal attention. x: (B, S, D)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if cfg.use_flash:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(
+            q, k, v, causal=True, window=cfg.window,
+            softcap=cfg.logit_softcap)
+    elif impl == "chunked" and S > q_chunk:
+        out = _attn_chunked(q, k, v, cfg, min(q_chunk, S), min(kv_chunk, S))
+    else:
+        groups = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(B, S, cfg.n_kv_heads, groups, cfg.head_dim)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+        scores *= 1.0 / np.sqrt(cfg.head_dim)
+        scores = softcap(scores, cfg.logit_softcap)
+        mask = _mask(S, cfg.window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+        out = out.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if _tp_attention(cfg.n_heads):
+        out = constrain(out, "batch", None, "heads", None)
+    else:
+        out = constrain(out, "batch", "residual", None, None)
+    return dense_apply(params["wo"], out.reshape(B, S, -1))
+
+
+# ---------------------------------------------------------------------------
+# Decode path — one new token against a static KV cache.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: AttentionConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    """KV cache for one layer. Sliding-window layers allocate only the
+    window (rolling buffer) — the sub-quadratic long-context path."""
+    length = min(max_seq, cfg.window) if cfg.window is not None else max_seq
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def mha_decode(params: Params, cfg: AttentionConfig, cache: Params,
+               x: jnp.ndarray, position: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, 1, D); position: (B,) absolute positions. Returns (out, cache).
+
+    The cache sequence axis is sharded over the model axis for long-context
+    cells ("kv_seq" rule); the softmax reduction over the sharded axis
+    lowers to an all-reduce, keeping per-chip memory ∝ seq/|model|.
+    """
+    B, one, D = x.shape
+    q = dense_apply(params["wq"], x).reshape(B, cfg.n_heads, cfg.head_dim)
+    k = dense_apply(params["wk"], x).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    v = dense_apply(params["wv"], x).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+    cos, sin = rotary_embedding(position, cfg.head_dim, cfg.rope_base)  # (B, hd/2)
+    q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+    k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+
+    L = cache["k"].shape[1]
+    # rolling-buffer slot for windowed layers, append slot otherwise
+    slot = jnp.where(jnp.int32(L) > position.astype(jnp.int32),
+                     position.astype(jnp.int32),
+                     position.astype(jnp.int32) % L) if cfg.window is not None \
+        else position.astype(jnp.int32)
+    ck = jax.vmap(lambda c, s, val: jax.lax.dynamic_update_slice_in_dim(c, val[None], s, 0)
+                  )(cache["k"], slot, k.astype(cache["k"].dtype))
+    cv = jax.vmap(lambda c, s, val: jax.lax.dynamic_update_slice_in_dim(c, val[None], s, 0)
+                  )(cache["v"], slot, v.astype(cache["v"].dtype))
+    ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+    cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, groups, cfg.head_dim)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, ck).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(cfg.head_dim)
+    scores = softcap(scores, cfg.logit_softcap)
+    # valid cache entries: t ≤ position (append) / all written slots (rolling)
+    t = jnp.arange(L)[None, :]
+    if cfg.window is not None:
+        n_written = jnp.minimum(position + 1, L)[:, None]
+        valid = t < n_written
+    else:
+        valid = t <= position[:, None]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, cv).reshape(B, 1, -1)
+    return dense_apply(params["wo"], out), {"k": ck, "v": cv}

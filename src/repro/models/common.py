@@ -1,0 +1,99 @@
+"""Shared model building blocks — pure-functional, pytree params.
+
+Every layer is (init(rng, ...) -> params, apply(params, x, ...) -> y).
+Params are fp32; compute is bf16 by default (cast at the boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import constrain
+
+__all__ = [
+    "Initializer", "dense_init", "dense_apply", "rmsnorm_init", "rmsnorm_apply",
+    "embed_init", "embed_apply", "rotary_embedding", "apply_rope",
+    "softcap", "count_params", "param_bytes", "cast_tree",
+]
+
+Params = Dict[str, Any]
+
+
+def _normal(rng, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.normal(rng, shape, dtype)
+
+
+def dense_init(rng, in_dim: int, out_dim: int, *, scale: Optional[float] = None
+               ) -> Params:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return {"kernel": _normal(rng, (in_dim, out_dim), scale)}
+
+
+def dense_apply(params: Params, x: jnp.ndarray, *, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return x.astype(dtype) @ params["kernel"].astype(dtype)
+
+
+def rmsnorm_init(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm_apply(params: Params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"])).astype(dt)
+
+
+def embed_init(rng, vocab: int, dim: int) -> Params:
+    return {"table": _normal(rng, (vocab, dim), 1.0)}
+
+
+def embed_apply(params: Params, ids: jnp.ndarray, *, dtype=jnp.bfloat16) -> jnp.ndarray:
+    out = jnp.take(params["table"].astype(dtype), ids, axis=0)
+    return constrain(out, "batch", "seq", "embed")
+
+
+def rotary_embedding(positions: jnp.ndarray, head_dim: int,
+                     base: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(…,) positions → cos/sin tables of shape (…, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(p.size * p.dtype.itemsize for p in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)

@@ -1,0 +1,43 @@
+"""EmbeddingBag — JAX has no native one; this is the RecSys hot path.
+
+take + segment-reduce formulation: bags of indices gather rows from the
+(row-sharded) table and reduce within the bag.  Under GSPMD the gather on a
+"table_rows"-sharded table lowers to the classic embedding all-to-all; the
+Pallas kernel (`repro.kernels.embedding_bag`) is the single-shard fast path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def embedding_bag_init(rng, n_rows: int, dim: int, *, scale: float = 0.01) -> Params:
+    table = scale * jax.random.normal(rng, (n_rows, dim), jnp.float32)
+    return {"table": table}
+
+
+def embedding_bag_apply(params: Params, idx: jnp.ndarray,
+                        weights: Optional[jnp.ndarray] = None,
+                        *, combiner: str = "sum",
+                        dtype=jnp.bfloat16) -> jnp.ndarray:
+    """idx: (B, H) int32 bags (H = hots per bag; pad with -1).
+
+    Returns (B, D). combiner ∈ {sum, mean}.
+    """
+    table = constrain(params["table"].astype(dtype), "table_rows", "feature")
+    mask = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    rows = jnp.take(table, safe, axis=0)                  # (B, H, D)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(dtype)
+    rows = jnp.where(mask[..., None], rows, 0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(mask.sum(axis=1, keepdims=True), 1).astype(dtype)
+    return out

@@ -1,0 +1,149 @@
+"""GNN substrate: static-shape graph batches + segment message passing.
+
+JAX has no native sparse message passing — per the assignment this IS part
+of the system: scatter/gather over an edge-index with ``segment_sum`` /
+``.at[].add``, masked for padding, shardable over nodes (GSPMD inserts the
+boundary exchange for cross-shard edges).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import dense_apply, dense_init
+from ..sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Padded, static-shape (possibly batched) graph.
+
+    x:         (N, F) node features.
+    pos:       (N, 3) positions (geometric models) or None.
+    edge_src:  (E,) int32 — message source.
+    edge_dst:  (E,) int32 — message destination.
+    edge_mask: (E,) bool — padding mask.
+    node_mask: (N,) bool.
+    graph_ids: (N,) int32 — which graph each node belongs to (batched mols).
+    n_graphs:  static int.
+    targets:   (N,) int labels / (N, V) regression / (G,) graph targets.
+    """
+
+    x: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    edge_mask: jnp.ndarray
+    node_mask: jnp.ndarray
+    graph_ids: jnp.ndarray
+    n_graphs: int
+    targets: jnp.ndarray
+    pos: Optional[jnp.ndarray] = None
+
+
+def _flatten_gb(gb: GraphBatch):
+    dyn = (gb.x, gb.edge_src, gb.edge_dst, gb.edge_mask, gb.node_mask,
+           gb.graph_ids, gb.targets, gb.pos)
+    return dyn, gb.n_graphs
+
+
+def _unflatten_gb(n_graphs, dyn):
+    x, es, ed, em, nm, gi, tg, pos = dyn
+    return GraphBatch(x=x, edge_src=es, edge_dst=ed, edge_mask=em, node_mask=nm,
+                      graph_ids=gi, n_graphs=n_graphs, targets=tg, pos=pos)
+
+
+jax.tree_util.register_pytree_node(GraphBatch, _flatten_gb, _unflatten_gb)
+
+
+def scatter_sum(messages: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray,
+                n_nodes: int) -> jnp.ndarray:
+    """Masked scatter-add of (E, F) edge messages into (N, F) nodes."""
+    msg = jnp.where(mask[:, None], messages, 0)
+    out = jnp.zeros((n_nodes, messages.shape[-1]), messages.dtype).at[dst].add(msg)
+    return constrain(out, "nodes", "hidden")
+
+
+def scatter_mean(messages: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray,
+                 n_nodes: int) -> jnp.ndarray:
+    s = scatter_sum(messages, dst, mask, n_nodes)
+    deg = jnp.zeros((n_nodes,), messages.dtype).at[dst].add(
+        mask.astype(messages.dtype))
+    return s / jnp.maximum(deg, 1)[:, None]
+
+
+def scatter_max(messages: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray,
+                n_nodes: int) -> jnp.ndarray:
+    neg = jnp.asarray(-1e30, messages.dtype)
+    msg = jnp.where(mask[:, None], messages, neg)
+    out = jnp.full((n_nodes, messages.shape[-1]), neg, messages.dtype).at[dst].max(msg)
+    return jnp.where(out <= neg / 2, 0, out)
+
+
+def gather(nodes: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(nodes, idx, axis=0)
+
+
+def segment_pool(node_feat: jnp.ndarray, graph_ids: jnp.ndarray,
+                 node_mask: jnp.ndarray, n_graphs: int, *, mean: bool = True):
+    """Per-graph pooling for batched small graphs."""
+    feat = jnp.where(node_mask[:, None], node_feat, 0)
+    s = jnp.zeros((n_graphs, node_feat.shape[-1]), node_feat.dtype).at[graph_ids].add(feat)
+    if not mean:
+        return s
+    cnt = jnp.zeros((n_graphs,), node_feat.dtype).at[graph_ids].add(
+        node_mask.astype(node_feat.dtype))
+    return s / jnp.maximum(cnt, 1)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# small MLP helper
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, dims: Sequence[int]) -> Params:
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {f"l{i}": dense_init(ks[i], dims[i], dims[i + 1])
+            for i in range(len(dims) - 1)}
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, *, act=jax.nn.silu,
+              final_act: bool = False, dtype=jnp.bfloat16) -> jnp.ndarray:
+    n = len(params)
+    for i in range(n):
+        x = dense_apply(params[f"l{i}"], x, dtype=dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Losses shared by GNN tasks
+# ---------------------------------------------------------------------------
+
+def node_class_loss(logits: jnp.ndarray, targets: jnp.ndarray,
+                    node_mask: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    per = (logz - gold) * node_mask
+    return per.sum() / jnp.maximum(node_mask.sum(), 1)
+
+
+def node_regression_loss(pred: jnp.ndarray, targets: jnp.ndarray,
+                         node_mask: jnp.ndarray) -> jnp.ndarray:
+    targets = targets.astype(jnp.float32)
+    if targets.ndim == pred.ndim - 1:
+        targets = jnp.broadcast_to(targets[..., None], pred.shape)
+    err = jnp.square(pred.astype(jnp.float32) - targets)
+    err = err.mean(axis=-1) * node_mask
+    return err.sum() / jnp.maximum(node_mask.sum(), 1)
+
+
+def graph_regression_loss(pred: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) -
+                               targets.astype(jnp.float32)))

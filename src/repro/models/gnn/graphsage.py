@@ -1,0 +1,74 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) — mean aggregator.
+
+h_v^{l+1} = σ(W_self · h_v ⊕ W_neigh · mean_{u∈N(v)} h_u), L2-normalized.
+Works full-batch or on sampled blocks from the neighbor sampler
+(`repro.data.sampler`), which is how the reddit-scale cell trains.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from ..common import dense_apply, dense_init
+from .common import (
+    GraphBatch,
+    gather,
+    mlp_init,
+    mlp_apply,
+    node_class_loss,
+    graph_regression_loss,
+    scatter_mean,
+    segment_pool,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    d_in: int
+    d_hidden: int = 128
+    n_layers: int = 2
+    n_classes: int = 41
+    aggregator: str = "mean"
+    graph_level: bool = False   # pool to per-graph output (molecule cells)
+
+
+def sage_init(rng, cfg: SAGEConfig) -> Params:
+    ks = jax.random.split(rng, cfg.n_layers * 2 + 1)
+    p: Params = {}
+    d = cfg.d_in
+    for l in range(cfg.n_layers):
+        out = cfg.d_hidden
+        p[f"self{l}"] = dense_init(ks[2 * l], d, out)
+        p[f"neigh{l}"] = dense_init(ks[2 * l + 1], d, out)
+        d = out
+    p["head"] = dense_init(ks[-1], d, cfg.n_classes)
+    return p
+
+
+def sage_apply(params: Params, cfg: SAGEConfig, gb: GraphBatch) -> jnp.ndarray:
+    h = gb.x.astype(jnp.bfloat16)
+    n = h.shape[0]
+    for l in range(cfg.n_layers):
+        msgs = gather(h, gb.edge_src)
+        agg = scatter_mean(msgs, gb.edge_dst, gb.edge_mask, n)
+        h = jax.nn.relu(
+            dense_apply(params[f"self{l}"], h) +
+            dense_apply(params[f"neigh{l}"], agg))
+        norm = jnp.linalg.norm(h.astype(jnp.float32), axis=-1, keepdims=True)
+        h = (h.astype(jnp.float32) / jnp.maximum(norm, 1e-6)).astype(h.dtype)
+    if cfg.graph_level:
+        pooled = segment_pool(h, gb.graph_ids, gb.node_mask, gb.n_graphs)
+        return dense_apply(params["head"], pooled)
+    return dense_apply(params["head"], h)
+
+
+def sage_loss(params: Params, cfg: SAGEConfig, gb: GraphBatch) -> jnp.ndarray:
+    out = sage_apply(params, cfg, gb)
+    if cfg.graph_level:
+        return graph_regression_loss(out[:, 0], gb.targets)
+    return node_class_loss(out, gb.targets, gb.node_mask)

@@ -1,0 +1,164 @@
+"""NequIP-family E(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+Hardware adaptation (DESIGN.md §2/§5): e3nn's spherical-harmonic irrep
+machinery is replaced by the equivalent *Cartesian* irreps up to l_max = 2 —
+node state = (scalars s, vectors v, traceless-symmetric rank-2 tensors t),
+messages combine neighbor features with edge harmonics Y0 = 1, Y1 = û,
+Y2 = ûûᵀ − I/3 through every symmetry-allowed product path, each path gated
+by a radial-MLP weight (Bessel basis, polynomial cutoff).  All ops are
+covariant by construction, so E(3)-equivariance holds exactly (property-
+tested under random rotations in tests/models/test_gnn.py) while everything
+lowers to dense einsums + segment_sum — the TPU-friendly form of the
+tensor-product kernel regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import dense_apply, dense_init
+from .common import (
+    GraphBatch,
+    gather,
+    graph_regression_loss,
+    mlp_apply,
+    mlp_init,
+    scatter_sum,
+    segment_pool,
+)
+
+Params = Dict[str, Any]
+
+# symmetry-allowed message paths (in_l, sh_l, out_l), Cartesian form
+_PATHS = [
+    ("s", 0, "s"), ("s", 1, "v"), ("s", 2, "t"),
+    ("v", 0, "v"), ("v", 1, "s"), ("v", 1, "t"), ("v", 2, "v"),
+    ("t", 0, "t"), ("t", 1, "v"), ("t", 2, "s"),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    d_in: int
+    d_hidden: int = 32          # channels per irrep order
+    n_layers: int = 5
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    graph_level: bool = True
+
+
+def bessel_basis(d: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """(E,) → (E, n_rbf) Bessel radial basis with polynomial cutoff."""
+    d = jnp.maximum(d, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * d[:, None] / cutoff) / d[:, None]
+    u = jnp.clip(d / cutoff, 0, 1)
+    env = 1.0 - 10.0 * u**3 + 15.0 * u**4 - 6.0 * u**5  # p=3 polynomial cutoff
+    return basis * env[:, None]
+
+
+def _traceless(t: jnp.ndarray) -> jnp.ndarray:
+    tr = jnp.trace(t, axis1=-2, axis2=-1)[..., None, None]
+    eye = jnp.eye(3, dtype=t.dtype)
+    return 0.5 * (t + jnp.swapaxes(t, -1, -2)) - tr * eye / 3.0
+
+
+def nequip_init(rng, cfg: NequIPConfig) -> Params:
+    ks = jax.random.split(rng, 2 + cfg.n_layers)
+    C = cfg.d_hidden
+    p: Params = {"embed": dense_init(ks[0], cfg.d_in, C)}
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[1 + i], 6)
+        p[f"layer{i}"] = {
+            # radial MLP: one weight per (path, channel)
+            "radial": mlp_init(kk[0], (cfg.n_rbf, 32, len(_PATHS) * C)),
+            "self_s": dense_init(kk[1], C, C),
+            "self_v": dense_init(kk[2], C, C),
+            "self_t": dense_init(kk[3], C, C),
+            "gate_v": dense_init(kk[4], C, C),
+            "gate_t": dense_init(kk[5], C, C),
+        }
+    p["head"] = mlp_init(ks[-1], (C, C, 1))
+    return p
+
+
+def _messages(s_j, v_j, t_j, y1, y2, w) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-edge tensor-product messages. Shapes:
+    s_j (E,C); v_j (E,C,3); t_j (E,C,3,3); y1 (E,3); y2 (E,3,3); w (E,P,C)."""
+    u1 = y1[:, None, :]                       # (E,1,3)
+    u2 = y2[:, None, :, :]                    # (E,1,3,3)
+    pi = {name: idx for idx, name in enumerate(
+        [f"{a}{l}{b}" for a, l, b in _PATHS])}
+
+    def W(a, l, b):
+        return w[:, pi[f"{a}{l}{b}"], :]
+
+    m_s = (W("s", 0, "s") * s_j
+           + W("v", 1, "s") * jnp.einsum("ecx,ex->ec", v_j, y1)
+           + W("t", 2, "s") * jnp.einsum("ecxy,exy->ec", t_j, y2))
+    m_v = (W("s", 1, "v")[..., None] * (s_j[..., None] * u1)
+           + W("v", 0, "v")[..., None] * v_j
+           + W("v", 2, "v")[..., None] * jnp.einsum("ecx,exy->ecy", v_j, y2)
+           + W("t", 1, "v")[..., None] * jnp.einsum("ecxy,ey->ecx", t_j, y1))
+    m_t = (W("s", 2, "t")[..., None, None] * (s_j[..., None, None] * u2)
+           + W("v", 1, "t")[..., None, None] * _traceless(
+               jnp.einsum("ecx,ey->ecxy", v_j, y1))
+           + W("t", 0, "t")[..., None, None] * t_j)
+    return m_s, m_v, m_t
+
+
+def nequip_apply(params: Params, cfg: NequIPConfig, gb: GraphBatch) -> jnp.ndarray:
+    assert gb.pos is not None, "NequIP needs positions"
+    N = gb.x.shape[0]
+    C = cfg.d_hidden
+    f32 = jnp.float32
+    s = dense_apply(params["embed"], gb.x.astype(f32), dtype=f32)     # (N,C)
+    v = jnp.zeros((N, C, 3), f32)
+    t = jnp.zeros((N, C, 3, 3), f32)
+
+    rij = (gather(gb.pos, gb.edge_src) - gather(gb.pos, gb.edge_dst)).astype(f32)
+    dist = jnp.linalg.norm(rij + 1e-12, axis=-1)
+    y1 = rij / jnp.maximum(dist, 1e-6)[:, None]                        # (E,3)
+    y2 = _traceless(jnp.einsum("ex,ey->exy", y1, y1))                  # (E,3,3)
+    rbf = bessel_basis(dist, cfg.n_rbf, cfg.cutoff)
+
+    for i in range(cfg.n_layers):
+        lp = params[f"layer{i}"]
+        w = _radial(lp["radial"], rbf).reshape(-1, len(_PATHS), C)
+        s_j, v_j, t_j = gather(s, gb.edge_src), gather(v, gb.edge_src), gather(t, gb.edge_src)
+        m_s, m_v, m_t = _messages(s_j, v_j, t_j, y1, y2, w)
+        em = gb.edge_mask
+        agg_s = scatter_sum(m_s, gb.edge_dst, em, N)
+        agg_v = scatter_sum(m_v.reshape(-1, C * 3), gb.edge_dst, em, N).reshape(N, C, 3)
+        agg_t = scatter_sum(m_t.reshape(-1, C * 9), gb.edge_dst, em, N).reshape(N, C, 3, 3)
+        # self-interaction: channel mixing per irrep (equivariant — acts on C)
+        s = s + jnp.tanh(dense_apply(lp["self_s"], agg_s, dtype=f32))
+        gate_v = jax.nn.sigmoid(dense_apply(lp["gate_v"], s, dtype=f32))
+        gate_t = jax.nn.sigmoid(dense_apply(lp["gate_t"], s, dtype=f32))
+        v = v + gate_v[..., None] * jnp.einsum(
+            "ncx,cd->ndx", agg_v, lp["self_v"]["kernel"].astype(f32))
+        t = t + gate_t[..., None, None] * jnp.einsum(
+            "ncxy,cd->ndxy", agg_t, lp["self_t"]["kernel"].astype(f32))
+
+    energy = mlp_apply(params["head"], s, act=jax.nn.silu, dtype=f32)  # (N,1)
+    if cfg.graph_level:
+        return segment_pool(energy, gb.graph_ids, gb.node_mask, gb.n_graphs,
+                            mean=False)
+    return energy
+
+
+def _radial(mlp_params: Params, rbf: jnp.ndarray) -> jnp.ndarray:
+    return mlp_apply(mlp_params, rbf.astype(jnp.float32), dtype=jnp.float32)
+
+
+def nequip_loss(params: Params, cfg: NequIPConfig, gb: GraphBatch) -> jnp.ndarray:
+    out = nequip_apply(params, cfg, gb)
+    if cfg.graph_level:
+        return graph_regression_loss(out[:, 0], gb.targets)
+    from .common import node_regression_loss
+
+    return node_regression_loss(out, gb.targets, gb.node_mask)

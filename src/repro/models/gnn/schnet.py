@@ -1,0 +1,103 @@
+"""SchNet (Schütt et al., arXiv:1706.08566) — continuous-filter convolutions.
+
+Interaction block: W·h_j ⊙ filter(RBF(‖r_i − r_j‖)) summed over neighbors,
+with shifted-softplus activations.  Positions come from the batch; for
+non-molecular graph cells the launcher synthesizes positions (DESIGN.md §5) —
+the kernel regime (RBF + edge gather/scatter) is what the cell exercises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import dense_apply, dense_init
+from .common import (
+    GraphBatch,
+    gather,
+    graph_regression_loss,
+    mlp_apply,
+    mlp_init,
+    node_regression_loss,
+    scatter_sum,
+    segment_pool,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    d_in: int
+    d_hidden: int = 64
+    n_interactions: int = 3
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    graph_level: bool = True
+    n_out: int = 1
+
+
+def ssp(x):
+    """shifted softplus (SchNet's activation)."""
+    return jax.nn.softplus(x) - np.log(2.0)
+
+
+def rbf_expand(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """(E,) distances → (E, n_rbf) Gaussian radial basis."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf, dtype=jnp.float32)
+    gamma = jnp.float32(10.0 * n_rbf / cutoff**2) / n_rbf
+    return jnp.exp(-gamma * jnp.square(dist[:, None] - centers[None, :]))
+
+
+def schnet_init(rng, cfg: SchNetConfig) -> Params:
+    ks = jax.random.split(rng, 2 + 4 * cfg.n_interactions)
+    p: Params = {"embed": dense_init(ks[0], cfg.d_in, cfg.d_hidden)}
+    for i in range(cfg.n_interactions):
+        base = 1 + 4 * i
+        p[f"int{i}"] = {
+            "filter": mlp_init(ks[base], (cfg.n_rbf, cfg.d_hidden, cfg.d_hidden)),
+            "in_proj": dense_init(ks[base + 1], cfg.d_hidden, cfg.d_hidden),
+            "out1": dense_init(ks[base + 2], cfg.d_hidden, cfg.d_hidden),
+            "out2": dense_init(ks[base + 3], cfg.d_hidden, cfg.d_hidden),
+        }
+    k_head = jax.random.split(ks[-1])
+    p["head"] = mlp_init(k_head[0], (cfg.d_hidden, cfg.d_hidden // 2, cfg.n_out))
+    return p
+
+
+def schnet_apply(params: Params, cfg: SchNetConfig, gb: GraphBatch) -> jnp.ndarray:
+    assert gb.pos is not None, "SchNet needs positions"
+    n = gb.x.shape[0]
+    h = dense_apply(params["embed"], gb.x.astype(jnp.bfloat16))
+    rij = gather(gb.pos, gb.edge_src) - gather(gb.pos, gb.edge_dst)
+    dist = jnp.linalg.norm(rij.astype(jnp.float32) + 1e-12, axis=-1)
+    rbf = rbf_expand(dist, cfg.n_rbf, cfg.cutoff).astype(jnp.bfloat16)
+    # smooth cosine cutoff, applied to the *filter output* (SchNetPack
+    # form) so beyond-cutoff edges contribute exactly zero in any dtype
+    env = (0.5 * (jnp.cos(np.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+           * (dist < cfg.cutoff)).astype(jnp.bfloat16)
+
+    for i in range(cfg.n_interactions):
+        ip = params[f"int{i}"]
+        w = mlp_apply(ip["filter"], rbf, act=ssp) * env[:, None]  # (E, H)
+        src_feat = gather(dense_apply(ip["in_proj"], h), gb.edge_src)
+        msg = src_feat * w
+        agg = scatter_sum(msg, gb.edge_dst, gb.edge_mask, n)
+        v = ssp(dense_apply(ip["out1"], agg))
+        h = h + dense_apply(ip["out2"], v)
+
+    out = mlp_apply(params["head"], h, act=ssp)
+    if cfg.graph_level:
+        return segment_pool(out, gb.graph_ids, gb.node_mask, gb.n_graphs,
+                            mean=False)
+    return out
+
+
+def schnet_loss(params: Params, cfg: SchNetConfig, gb: GraphBatch) -> jnp.ndarray:
+    out = schnet_apply(params, cfg, gb)
+    if cfg.graph_level:
+        return graph_regression_loss(out[:, 0], gb.targets)
+    return node_regression_loss(out, gb.targets, gb.node_mask)

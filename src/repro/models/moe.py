@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN — per-row sort-based dispatch, expert-parallel.
+
+TPU/SPMD-native formulation: every *batch row* dispatches its own S×top_k
+assignments (argsort by expert id, per-expert capacity, overflow dropped),
+so the dispatch tensors stay sharded over the data axis — no global sort,
+no cross-shard scatter.  Expert weights shard over the model axis (EP when
+`n_experts` divides it; the launcher degrades to within-expert TP on the
+FFN dim otherwise, e.g. mixtral's 8 experts on 16 chips), and the combine
+is a local gather + scatter-add whose cross-expert reduction lowers to one
+all-reduce over the model axis.
+
+Dispatch is *gather-based*: a small int32 `tok_of_slot` (B, E, C) table is
+scattered once, then activations are only ever gathered — cheap on TPU and
+friendly to GSPMD propagation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True  # renormalize top-k gates (Mixtral-style)
+
+
+def capacity(cfg: MoEConfig, tokens_per_row: int) -> int:
+    c = int(np.ceil(tokens_per_row * cfg.top_k * cfg.capacity_factor
+                    / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for lane alignment
+
+
+def moe_init(rng, cfg: MoEConfig) -> Params:
+    ks = jax.random.split(rng, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in, s_out = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    return {
+        "router": dense_init(ks[0], D, E),
+        "wi": s_in * jax.random.normal(ks[1], (E, D, F), jnp.float32),
+        "wg": s_in * jax.random.normal(ks[2], (E, D, F), jnp.float32),
+        "wo": s_out * jax.random.normal(ks[3], (E, F, D), jnp.float32),
+    }
+
+
+def moe_apply(params: Params, cfg: MoEConfig, x: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (y, aux_loss).  SwiGLU experts."""
+    B, S, D = x.shape
+    K, E = cfg.top_k, cfg.n_experts
+    C = capacity(cfg, S)
+    SK = S * K
+    dt = x.dtype
+
+    logits = (x.astype(jnp.float32) @ params["router"]["kernel"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    gate, idx = jax.lax.top_k(probs, K)                          # (B, S, K)
+    if cfg.router_norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-row dispatch plan (all ops stay sharded over batch) ----------
+    fe = idx.reshape(B, SK).astype(jnp.int32)
+    fg = gate.reshape(B, SK)
+    ftok = jnp.broadcast_to(
+        (jnp.arange(SK, dtype=jnp.int32) // K)[None], (B, SK))
+    order = jnp.argsort(fe, axis=1, stable=True)
+    se = jnp.take_along_axis(fe, order, axis=1)
+    st = jnp.take_along_axis(ftok, order, axis=1)
+    sg = jnp.take_along_axis(fg, order, axis=1)
+    brow = jnp.arange(B, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((B, E), jnp.int32).at[brow, fe].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    rank = jnp.arange(SK, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(starts, se, axis=1)
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)                 # drop col
+
+    # slot → (token, gate) tables; sentinel token = S marks empty slots
+    tok_of_slot = jnp.full((B, E * C + 1), S, jnp.int32
+                           ).at[brow, slot].set(st)[:, : E * C]
+    gate_of_slot = jnp.zeros((B, E * C + 1), fg.dtype
+                             ).at[brow, slot].set(sg)[:, : E * C]
+    filled = (tok_of_slot < S)[..., None]                        # (B, E·C, 1)
+
+    # ---- gather-dispatch → expert FFN → weighted combine -------------------
+    xe = jnp.take_along_axis(
+        x, jnp.minimum(tok_of_slot, S - 1)[..., None], axis=1)
+    xe = jnp.where(filled, xe, 0).reshape(B, E, C, D)
+    xe = constrain(xe, "batch", "expert", None, None)
+
+    wi = params["wi"].astype(dt)
+    wg = params["wg"].astype(dt)
+    wo = params["wo"].astype(dt)
+    h = jnp.einsum("becd,edf->becf", xe, wi)
+    g = jnp.einsum("becd,edf->becf", xe, wg)
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * h, wo)
+    ye = constrain(ye, "batch", "expert", None, None)
+
+    contrib = (ye.reshape(B, E * C, D)
+               * gate_of_slot[..., None].astype(dt)
+               * filled.astype(dt))
+    y = jnp.zeros((B, S + 1, D), dt).at[
+        brow[..., None], tok_of_slot[..., None],
+        jnp.arange(D)[None, None]].add(contrib)[:, :S]
+    y = constrain(y, "batch", "residual", "embed")
+
+    # Switch-style load-balancing aux loss
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    fe_frac = counts.sum(0).astype(jnp.float32) / (B * SK)
+    aux = E * jnp.sum(me * fe_frac)
+    return y, aux

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Model code annotates tensors with *logical* axes ("batch", "heads", …);
+the launcher installs a rule table mapping logical → mesh axes for the
+current mesh.  Outside any mesh (unit tests, single-CPU smoke runs) every
+annotation is a no-op, so models run unmodified everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "use_rules", "logical_spec", "constrain",
+           "current_mesh"]
+
+AxisRules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Default production rules (see DESIGN.md §4).  "pod" is a pure-DP outer axis.
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "residual": "model",     # Megatron-SP: residual stream seq-sharded
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "capacity": None,
+    "kv_seq": "model",       # decode-time KV cache sequence sharding
+    "nodes": ("pod", "data"),  # GNN graphs (full-mesh variant refuted: §Perf)
+    "edge_chunk": ("pod", "data"),
+    "hidden": None,
+    "table_rows": "model",   # DLRM embedding-table row sharding
+    "feature": None,
+    "roots": ("pod", "data", "model"),  # FLEXIS match roots: whole mesh
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[AxisRules] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[AxisRules] = None):
+    """Install sharding rules for `mesh` (mesh axes not in the rule target
+    are dropped automatically, so the same table serves 2-D and 3-D meshes)."""
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    _CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def logical_spec(*axes: Optional[str]) -> P:
+    """PartitionSpec for a sequence of logical axis names (None = replicated)."""
+    rules = _CTX.rules or DEFAULT_RULES
+    mesh = _CTX.mesh
+    names = set(mesh.axis_names) if mesh is not None else set()
+    parts = []
+    used: set = set()
+    for ax in axes:
+        tgt = rules.get(ax) if ax is not None else None
+        if tgt is None:
+            parts.append(None)
+            continue
+        if isinstance(tgt, str):
+            tgt = (tgt,)
+        eff = tuple(t for t in tgt if t in names and t not in used)
+        used |= set(eff)
+        if len(eff) == 0:
+            parts.append(None)
+        elif len(eff) == 1:
+            parts.append(eff[0])
+        else:
+            parts.append(eff)
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, part) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(part, (tuple, list)):
+        n = 1
+        for p in part:
+            n *= sizes.get(p, 1)
+        return n
+    return sizes.get(part, 1)
+
+
+def constrain(x, *axes: Optional[str]):
+    """Sharding-constrain `x` to logical axes; no-op outside a mesh context.
+
+    Divisibility guard: any logical axis whose mesh extent does not divide
+    the corresponding tensor dim is dropped (replicated) instead of forcing
+    GSPMD into involuntary-full-rematerialization resharding — e.g. 8 KV
+    heads on a 16-way model axis, or 24 query heads on 16 chips.
+    """
+    if _CTX.mesh is None:
+        return x
+    mesh = _CTX.mesh
+    spec = logical_spec(*axes)
+    parts = []
+    for dim, part in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if part is not None and dim % _axis_size(mesh, part) != 0:
+            part = None
+        parts.append(part)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def named_sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, logical_spec(*axes))

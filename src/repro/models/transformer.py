@@ -1,0 +1,323 @@
+"""Decoder-only transformer covering all five assigned LM architectures.
+
+Layers are *scanned* (params stacked on a leading axis) so 46-layer configs
+compile as one loop — with optional per-layer remat.  Alternating
+local/global stacks (gemma2) scan over (local, global) layer *pairs* so the
+scan body stays uniform.  Dense-FFN and MoE variants share the block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    AttentionConfig,
+    attention_init,
+    init_cache,
+    mha_decode,
+    mha_train,
+)
+from .common import (
+    dense_apply,
+    dense_init,
+    embed_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softcap,
+)
+from .moe import MoEConfig, moe_apply, moe_init
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int                          # dense-FFN hidden (ignored if MoE)
+    # --- MoE (n_experts == 0 → dense) ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- attention variant ---
+    window: Optional[int] = None       # sliding window (all layers)
+    local_global: bool = False         # alternate local(window)/global layers
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_base: float = 10000.0
+    # --- execution ---
+    remat: bool = True
+    use_flash: bool = False
+    attn_impl: str = "dense"           # "dense" | "chunked" (flash-style scan)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    scan_layers: bool = True           # False: unrolled python loop (used by
+                                       # the dry-run cost calibration — XLA
+                                       # cost analysis counts while bodies once)
+    dtype: Any = jnp.bfloat16
+
+    def attn_cfg(self, *, local: bool) -> AttentionConfig:
+        win = self.window if (local or not self.local_global) else None
+        if not self.local_global and self.window is None:
+            win = None
+        return AttentionConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            rope_base=self.rope_base,
+            qk_norm=self.qk_norm,
+            logit_softcap=self.attn_softcap,
+            window=win,
+            use_flash=self.use_flash,
+        )
+
+    @property
+    def moe_cfg(self) -> Optional[MoEConfig]:
+        if self.n_experts == 0:
+            return None
+        return MoEConfig(self.d_model, self.moe_d_ff, self.n_experts,
+                         self.top_k, capacity_factor=self.moe_capacity_factor)
+
+    @property
+    def layers_per_step(self) -> int:
+        return 2 if self.local_global else 1
+
+    @property
+    def n_scan_steps(self) -> int:
+        assert self.n_layers % self.layers_per_step == 0
+        return self.n_layers // self.layers_per_step
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + layers), for 6·N·D."""
+        d, hd = self.d_model, self.head_dim
+        attn = d * hd * (self.n_heads * 2) + d * hd * (self.n_kv_heads * 2)
+        if self.n_experts:
+            ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.vocab * d + self.n_layers * per_layer + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only) for 6·N_active·D."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * d * self.moe_d_ff
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _ffn_init(rng, cfg: TransformerConfig) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, cfg.d_ff),
+        "wg": dense_init(ks[1], cfg.d_model, cfg.d_ff),
+        "wo": dense_init(ks[2], cfg.d_ff, cfg.d_model),
+    }
+
+
+def _block_init(rng, cfg: TransformerConfig, *, local: bool) -> Params:
+    ks = jax.random.split(rng, 2)
+    p: Params = {
+        "ln_attn": rmsnorm_init(cfg.d_model),
+        "ln_ffn": rmsnorm_init(cfg.d_model),
+        "attn": attention_init(ks[0], cfg.attn_cfg(local=local)),
+    }
+    if cfg.moe_cfg is not None:
+        p["moe"] = moe_init(ks[1], cfg.moe_cfg)
+    else:
+        p["ffn"] = _ffn_init(ks[1], cfg)
+    return p
+
+
+def _step_init(rng, cfg: TransformerConfig) -> Params:
+    """One scan step = one block, or a (local, global) pair."""
+    if cfg.local_global:
+        k1, k2 = jax.random.split(rng)
+        return {
+            "local": _block_init(k1, cfg, local=True),
+            "global": _block_init(k2, cfg, local=False),
+        }
+    return _block_init(rng, cfg, local=False)
+
+
+def transformer_init(rng, cfg: TransformerConfig) -> Params:
+    k_embed, k_layers = jax.random.split(rng)
+    layer_rngs = jax.random.split(k_layers, cfg.n_scan_steps)
+    stacked = jax.vmap(lambda r: _step_init(r, cfg))(layer_rngs)
+    return {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_final": rmsnorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    import os
+
+    h = dense_apply(p["wi"], x)
+    g = dense_apply(p["wg"], x)
+    if os.environ.get("REPRO_SP_FFN") == "1":
+        # perf experiment H1b: keep the FFN sequence-sharded — XLA gathers
+        # the (small) weights instead of the (large) activations
+        h = constrain(jax.nn.silu(g) * h, "batch", "residual", None)
+    else:
+        h = constrain(jax.nn.silu(g) * h, "batch", "seq", "mlp")
+    return dense_apply(p["wo"], h)
+
+
+def _block_apply(p: Params, cfg: TransformerConfig, x, positions, *, local: bool):
+    a = mha_train(p["attn"], cfg.attn_cfg(local=local),
+                  rmsnorm_apply(p["ln_attn"], x), positions,
+                  impl=cfg.attn_impl, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    x = constrain(x + a, "batch", "residual", "embed")
+    h = rmsnorm_apply(p["ln_ffn"], x)
+    if cfg.moe_cfg is not None:
+        f, aux = moe_apply(p["moe"], cfg.moe_cfg, h)
+    else:
+        f, aux = _ffn_apply(p["ffn"], h), jnp.float32(0.0)
+    return constrain(x + f, "batch", "residual", "embed"), aux
+
+
+def transformer_apply(params: Params, cfg: TransformerConfig,
+                      tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32 → (logits (B, S, V) bf16, aux_loss)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = jnp.take(params["embed"]["table"].astype(cfg.dtype), tokens, axis=0)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    x = constrain(x, "batch", "residual", "embed")
+
+    def step(carry, layer_p):
+        x, aux = carry
+        if cfg.local_global:
+            x, a1 = _block_apply(layer_p["local"], cfg, x, positions, local=True)
+            x, a2 = _block_apply(layer_p["global"], cfg, x, positions, local=False)
+            return (x, aux + a1 + a2), None
+        x, a = _block_apply(layer_p, cfg, x, positions, local=False)
+        return (x, aux + a), None
+
+    import os
+
+    policy_name = os.environ.get("REPRO_REMAT_POLICY", "full")
+    if not cfg.remat or policy_name == "none":
+        step_fn = step
+    elif policy_name == "dots":
+        # perf experiment H3: save matmul outputs — no recompute (and no
+        # re-gather) of the TP-region projections in the backward pass
+        step_fn = jax.checkpoint(
+            step, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        step_fn = jax.checkpoint(step)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(step_fn, (x, jnp.float32(0.0)),
+                                   params["layers"])
+    else:
+        carry = (x, jnp.float32(0.0))
+        for i in range(cfg.n_scan_steps):
+            layer_p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            carry, _ = step_fn(carry, layer_p)
+        x, aux = carry
+    x = rmsnorm_apply(params["ln_final"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"]["table"].astype(cfg.dtype))
+    logits = softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def lm_loss(params: Params, cfg: TransformerConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, *, aux_weight: float = 0.01) -> jnp.ndarray:
+    logits, aux = transformer_apply(params, cfg, tokens)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> Params:
+    def one(local: bool):
+        return init_cache(cfg.attn_cfg(local=local), batch, max_seq, cfg.dtype)
+
+    def step_cache(_):
+        if cfg.local_global:
+            return {"local": one(True), "global": one(False)}
+        return one(False)
+
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_scan_steps,) + x.shape),
+        step_cache(None))
+
+
+def _block_decode(p, cfg, cache, x, position, *, local):
+    a, cache = mha_decode(p["attn"], cfg.attn_cfg(local=local), cache,
+                          rmsnorm_apply(p["ln_attn"], x), position)
+    x = x + a
+    h = rmsnorm_apply(p["ln_ffn"], x)
+    if cfg.moe_cfg is not None:
+        f, _ = moe_apply(p["moe"], cfg.moe_cfg, h)
+    else:
+        f = _ffn_apply(p["ffn"], h)
+    return x + f, cache
+
+
+def transformer_decode(params: Params, cfg: TransformerConfig, cache: Params,
+                       tokens: jnp.ndarray, positions: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. tokens: (B, 1); positions: (B,). Returns
+    (logits (B, 1, V), new_cache)."""
+    x = jnp.take(params["embed"]["table"].astype(cfg.dtype), tokens, axis=0)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+
+    def step(x, xs):
+        layer_p, layer_cache = xs
+        if cfg.local_global:
+            x, c1 = _block_decode(layer_p["local"], cfg, layer_cache["local"],
+                                  x, positions, local=True)
+            x, c2 = _block_decode(layer_p["global"], cfg, layer_cache["global"],
+                                  x, positions, local=False)
+            return x, {"local": c1, "global": c2}
+        x, c = _block_decode(layer_p, cfg, layer_cache, x, positions, local=False)
+        return x, c
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))
+    else:
+        outs = []
+        for i in range(cfg.n_scan_steps):
+            xs_i = jax.tree_util.tree_map(lambda a: a[i],
+                                          (params["layers"], cache))
+            x, c_i = step(x, xs_i)
+            outs.append(c_i)
+        new_cache = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *outs)
+    x = rmsnorm_apply(params["ln_final"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"]["table"].astype(cfg.dtype))
+    return softcap(logits, cfg.final_softcap), new_cache

@@ -1,0 +1,148 @@
+"""Sharded, atomic, mesh-shape-agnostic checkpoints (fault tolerance core).
+
+Layout (one directory per step):
+    <root>/step_000123/
+        manifest.json         # tree structure, shapes, dtypes, data state
+        arr_00000.npy …       # one file per leaf (full logical array)
+        COMMIT                # written last — a step without COMMIT is junk
+
+Guarantees:
+  * atomic: writes go to step_XXXX.tmp/, fsync'd, then rename + COMMIT —
+    a crash mid-save never corrupts the latest good checkpoint;
+  * elastic: leaves are saved as *full logical arrays* so a restore may use
+    a different mesh shape (re-sharding happens on load via device_put);
+  * resumable data pipeline: the manifest carries opaque `extra` state
+    (data-pipeline cursor, rng key, mining super-block index);
+  * retention: keep_last prunes old steps after a successful COMMIT.
+
+An async flavor (`save_async`) offloads the host write to a thread so the
+next step's compute overlaps the checkpoint I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+
+_PENDING: list = []
+
+
+def _tree_paths(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(root: str | os.PathLike, step: int, tree, *,
+         extra: Optional[Dict[str, Any]] = None, keep_last: int = 3) -> Path:
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _tree_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "time": time.time(),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"arr_{i:05d}.npy", arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # fsync directory contents before commit
+    for f in tmp.iterdir():
+        fd = os.open(f, os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    (final / "COMMIT").write_text("ok")
+
+    # retention
+    steps = sorted(p for p in root.glob("step_????????")
+                   if (p / "COMMIT").exists())
+    for old in steps[:-keep_last]:
+        shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def save_async(root, step, tree, *, extra=None, keep_last: int = 3):
+    """Snapshot to host memory synchronously, write to disk in a thread."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    snapshot = jax.tree_util.tree_unflatten(treedef, host_leaves)
+
+    t = threading.Thread(
+        target=save, args=(root, step, snapshot),
+        kwargs=dict(extra=extra, keep_last=keep_last), daemon=True)
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending():
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def latest_step(root) -> Optional[int]:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = sorted(p for p in root.glob("step_????????")
+                   if (p / "COMMIT").exists())
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def restore(root, tree_like, *, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, Dict[str, Any], int]:
+    """Restore into the structure of `tree_like` (shapes must match).
+
+    `shardings`: optional pytree of NamedSharding — leaves are device_put
+    with them (elastic re-mesh happens here: the stored arrays are logical).
+    Returns (tree, extra, step).
+    """
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = root / f"step_{step:08d}"
+    if not (d / "COMMIT").exists():
+        raise FileNotFoundError(f"checkpoint {d} has no COMMIT (partial write?)")
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs tree {len(leaves_like)}"
+    out = []
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves_like))
+    for i, (like, sh) in enumerate(zip(leaves_like, sh_leaves)):
+        arr = np.load(d / f"arr_{i:05d}.npy")
+        want = tuple(getattr(like, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"leaf {i}: shape {arr.shape} != expected {want}")
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest.get("extra", {}), step

@@ -1,0 +1,105 @@
+"""Optimizers — AdamW (+ cosine/linear-warmup schedule), pure functional.
+
+Optimizer state shards like its parameters by default; ZeRO-1 style
+data-axis sharding of the moments is opt-in via `zero1_specs` (used by the
+launcher when the mesh has a data axis and the param's leading dim divides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: AdamWState,
+                 params: Params) -> Tuple[Params, AdamWState]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    mflat = treedef.flatten_up_to(state.mu)
+    vflat = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def zero1_specs(param_specs, abstract_params, data_axes=("data",), mesh=None):
+    """ZeRO-1: shard optimizer moments along the first *unsharded, divisible*
+    dim over the data axis (params keep their own sharding)."""
+    if mesh is None:
+        return param_specs
+    dsize = 1
+    for ax in data_axes:
+        dsize *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(ax, 1)
+
+    def one(spec: P, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, part) in enumerate(zip(leaf.shape, parts)):
+            if part is None and dim % max(dsize, 1) == 0 and dim >= dsize > 1:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(one, param_specs, abstract_params)

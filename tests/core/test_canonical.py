@@ -1,0 +1,91 @@
+"""Canonicalization + automorphisms — correctness vs brute force."""
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (
+    Pattern,
+    are_isomorphic,
+    automorphisms,
+    canonical_form,
+    canonical_key,
+    pattern_from_edges,
+    paper_fig1,
+)
+from tests.conftest import patterns
+
+
+def test_paper_p1_automorphisms():
+    # paper §2.1.3: P1 has exactly two automorphisms — identity and the
+    # u1<->u3 swap (same label), u2 fixed.
+    p1, _, _ = paper_fig1()
+    auts = automorphisms(p1)
+    assert auts.shape == (2, 3)
+    assert auts[0].tolist() == [0, 1, 2]
+    assert auts[1].tolist() == [2, 1, 0]
+
+
+def test_unlabeled_triangle_six_automorphisms():
+    # paper §2.1.3: if all vertices of P1 had the same label -> 3! = 6
+    p = pattern_from_edges([0, 0, 0], [(0, 1), (1, 2)], bidir=True)
+    p = p.with_edge(0, 2).with_edge(2, 0)  # make full triangle for symmetry
+    assert automorphisms(p).shape[0] == 6
+
+
+def test_path_same_labels():
+    # path a-b-c with all labels equal: only identity and reversal
+    p = pattern_from_edges([0, 0, 0], [(0, 1), (1, 2)], bidir=True)
+    assert automorphisms(p).shape[0] == 2
+
+
+@settings(max_examples=150, deadline=None)
+@given(patterns(max_k=5))
+def test_canonical_key_permutation_invariant(pat):
+    rng = np.random.default_rng(hash(pat.key()) % 2**32)
+    perm = rng.permutation(pat.k)
+    assert canonical_key(pat) == canonical_key(pat.permuted(perm))
+    assert are_isomorphic(pat, pat.permuted(perm))
+
+
+@settings(max_examples=100, deadline=None)
+@given(patterns(max_k=4), patterns(max_k=4))
+def test_canonical_key_separates_nonisomorphic(a, b):
+    # brute-force isomorphism check as oracle
+    import itertools
+
+    def brute_iso(x, y):
+        if x.k != y.k:
+            return False
+        for perm in itertools.permutations(range(x.k)):
+            if np.array_equal(x.permuted(perm).adj, y.adj) and np.array_equal(
+                x.permuted(perm).labels, y.labels
+            ):
+                return True
+        return False
+
+    assert are_isomorphic(a, b) == brute_iso(a, b)
+
+
+@settings(max_examples=80, deadline=None)
+@given(patterns(max_k=5))
+def test_canonical_form_is_fixed_point(pat):
+    cf = canonical_form(pat)
+    assert canonical_key(cf) == canonical_key(pat)
+    assert cf.key() == canonical_form(cf).key()
+
+
+@settings(max_examples=80, deadline=None)
+@given(patterns(max_k=5))
+def test_automorphisms_are_closed_group(pat):
+    auts = automorphisms(pat)
+    # identity first
+    assert auts[0].tolist() == list(range(pat.k))
+    # every automorphism preserves the pattern
+    for a in auts:
+        q = pat.permuted(a)
+        assert np.array_equal(q.adj, pat.adj) and np.array_equal(q.labels, pat.labels)
+    # closed under composition
+    aset = {tuple(a.tolist()) for a in auts}
+    for a in auts[:6]:
+        for b in auts[:6]:
+            comp = tuple(int(a[x]) for x in b)
+            assert comp in aset

@@ -1,0 +1,51 @@
+"""Distributed mining equivalence — runs a subprocess with 8 forced host
+devices (XLA_FLAGS must be set before jax init, so not in-process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8
+    from repro.core import *
+    from repro.core.distributed import distributed_support
+    from repro.core.flexis import evaluate_pattern
+    from repro.core.graph import DeviceGraph
+    from repro.data.synthetic import rmat_graph
+
+    g = rmat_graph(200, 1200, n_labels=2, seed=3, undirected=True)
+    cfg = MatchConfig.for_graph(g, cap=2048, root_block=32)
+    pats = initial_candidates(g)[:4]
+    mcfg = MiningConfig(sigma=2, lam=1.0, metric="mis_luby", complete=True,
+                        match=cfg)
+    dg = DeviceGraph.from_host(g)
+    for pat in pats:
+        single = evaluate_pattern(g, dg, pat, tau=10**6, cfg=mcfg)
+        dist, found = distributed_support(g, pat, tau=10**6, match_cfg=cfg,
+                                          complete=True)
+        assert dist == single.support, (pat, dist, single.support)
+    # early exit returns exactly tau when enough embeddings exist
+    pat = pats[0]
+    full, _ = distributed_support(g, pat, tau=10**6, match_cfg=cfg,
+                                  complete=True)
+    if full >= 3:
+        got, _ = distributed_support(g, pat, tau=3, match_cfg=cfg)
+        assert got == 3, got
+    print("DISTRIBUTED_OK", flush=True)
+""")
+
+
+@pytest.mark.slow
+def test_distributed_equals_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__)))))
+    assert "DISTRIBUTED_OK" in proc.stdout, proc.stderr[-3000:]

@@ -1,0 +1,123 @@
+"""End-to-end mining loop — Eq. 1, metric orderings, generator equivalence."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, assume, HealthCheck
+
+from repro.core import (
+    MatchConfig,
+    MiningConfig,
+    build_graph,
+    canonical_key,
+    mine,
+    paper_fig1,
+    tau_threshold,
+)
+from tests.conftest import data_graphs
+
+
+def _cfg(g, **kw):
+    kw.setdefault("match", MatchConfig.for_graph(g, cap=4096, root_block=32, chunk=4))
+    return MiningConfig(**kw)
+
+
+def test_eq1_endpoints():
+    # λ=1 → τ=σ ; λ=0 → τ=⌊σ/n⌋ (paper §3.1.1)
+    for sigma in (2, 7, 100):
+        for n in (2, 3, 5):
+            assert tau_threshold(sigma, 1.0, n) == sigma
+            assert tau_threshold(sigma, 0.0, n) == max(1, math.floor(sigma / n))
+    # paper's worked example: σ=2, λ=0.25, n=3 → τ=1
+    assert tau_threshold(2, 0.25, 3) == 1
+
+
+def test_paper_fig1_frequency_scenarios():
+    """§3.1.1: σ=3 ⇒ P1 infrequent under mIS, frequent under MNI;
+    σ=2, λ=1 ⇒ frequent under mIS iff greedy finds the 2-set."""
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+
+    res_mni = mine(g, _cfg(g, sigma=3, metric="mni", max_pattern_size=3))
+    freq_mni = {canonical_key(p) for p, _ in res_mni.frequent}
+    assert canonical_key(p1) in freq_mni  # MNI=3 ≥ 3
+
+    res_mis = mine(g, _cfg(g, sigma=3, lam=1.0, metric="mis", max_pattern_size=3))
+    freq_mis = {canonical_key(p) for p, _ in res_mis.frequent}
+    assert canonical_key(p1) not in freq_mis  # mIS ≤ MIS = 2 < 3
+
+    res2 = mine(g, _cfg(g, sigma=2, lam=1.0, metric="mis", max_pattern_size=3))
+    sup = {canonical_key(p): s for p, s in res2.frequent}
+    assert sup.get(canonical_key(p1)) == 2
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(min_n=8, max_n=14, n_labels=2))
+def test_metric_ordering_mis_le_mni(g):
+    """For every searched pattern: mIS support ≤ MNI support (complete runs)."""
+    cfg_m = _cfg(g, sigma=2, lam=1.0, metric="mis", max_pattern_size=3, complete=True)
+    cfg_n = _cfg(g, sigma=2, metric="mni", max_pattern_size=3, complete=True)
+    res_m, res_n = mine(g, cfg_m), mine(g, cfg_n)
+    mni = {canonical_key(s.pattern): s.support for s in res_n.stats}
+    for s in res_m.stats:
+        if s.overflowed:
+            continue
+        key = canonical_key(s.pattern)
+        if key in mni:
+            assert s.support <= mni[key], (s.pattern, s.support, mni[key])
+
+
+@settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(min_n=6, max_n=12, n_labels=2, p_edge_denom=5))
+def test_generators_agree_on_frequent_sets(g):
+    """merge vs edge-extension generation: same frequent patterns under MNI
+    (deterministic metric), sizes ≤ 3 — Theorem 3.6 in practice."""
+    cfg_a = _cfg(g, sigma=2, metric="mni", generation="merge", max_pattern_size=3)
+    cfg_b = _cfg(g, sigma=2, metric="mni", generation="edge_ext", max_pattern_size=3)
+    fa = {canonical_key(p) for p, _ in mine(g, cfg_a).frequent}
+    fb = {canonical_key(p) for p, _ in mine(g, cfg_b).frequent}
+    assert fa == fb
+
+
+def test_searched_counts_merge_leq_edge_ext():
+    """The paper's Table 2 direction: merging searches fewer candidates."""
+    rng = np.random.default_rng(7)
+    n = 30
+    labels = rng.integers(0, 2, n)
+    m = rng.random((n, n)) < 0.1
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    g = build_graph(n, np.stack([src, dst], 1), labels)
+    a = mine(g, _cfg(g, sigma=3, lam=1.0, metric="mis", generation="merge",
+                     max_pattern_size=4))
+    b = mine(g, _cfg(g, sigma=3, lam=1.0, metric="mis", generation="edge_ext",
+                     max_pattern_size=4))
+    assert a.searched <= b.searched
+
+
+def test_slider_monotonicity():
+    """Higher λ ⇒ higher τ ⇒ fewer (or equal) frequent patterns (Fig 13b)."""
+    rng = np.random.default_rng(11)
+    n = 24
+    labels = rng.integers(0, 2, n)
+    m = rng.random((n, n)) < 0.15
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    g = build_graph(n, np.stack([src, dst], 1), labels)
+    counts = []
+    for lam in (0.0, 0.5, 1.0):
+        res = mine(g, _cfg(g, sigma=4, lam=lam, metric="mis", max_pattern_size=3))
+        counts.append(len(res.frequent))
+    assert counts[0] >= counts[1] >= counts[2]
+
+
+def test_timeout_flag():
+    rng = np.random.default_rng(5)
+    n = 60
+    labels = rng.integers(0, 2, n)
+    m = rng.random((n, n)) < 0.2
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    g = build_graph(n, np.stack([src, dst], 1), labels)
+    res = mine(g, _cfg(g, sigma=2, lam=0.0, metric="mis", max_pattern_size=5,
+                       time_limit_s=0.0))
+    assert res.timed_out

@@ -1,0 +1,139 @@
+"""Generation step — Lemmas 3.3/3.4/3.5 and Theorem 3.6 as properties."""
+import numpy as np
+from hypothesis import given, settings, assume
+
+from repro.core import (
+    Pattern,
+    canonical_key,
+    core_graphs,
+    core_groups,
+    dedupe_patterns,
+    generate_new_patterns,
+    edge_extension_candidates,
+    pattern_from_edges,
+    paper_fig1,
+)
+from tests.conftest import patterns
+
+
+def _connected_subpatterns(pat):
+    subs = []
+    for v in range(pat.k):
+        sp = pat.remove_vertex(v)
+        if sp.is_connected():
+            subs.append(sp)
+    return subs
+
+
+def test_core_graphs_of_p1():
+    # paper §2.3.3 lists three core graphs for P1: C1^u1, C1^u3 (endpoints,
+    # connected Γ) and C1^u2 (center, Γ = two isolated A-vertices).
+    p1, _, _ = paper_fig1()
+    cgs = core_graphs(p1)
+    assert len(cgs) == 3
+    by_label = sorted(cg.marked_label for cg in cgs)
+    assert by_label == [0, 0, 1]  # two A-marked endpoint cores + one B-marked
+
+
+def test_core_group_isomorphic_cores_share_key():
+    # paper §2.3.2: C1^u1 isomorphic to C1^u3; C1^u2 is its own group
+    p1, _, _ = paper_fig1()
+    groups = core_groups([p1])
+    assert len(groups) == 2
+    sizes = sorted(len(cgs) for cgs in groups.values())
+    assert sizes == [1, 2]
+
+
+@settings(max_examples=120, deadline=None)
+@given(patterns(min_k=3, max_k=5))
+def test_lemma_3_4_completeness(pat):
+    """Every connected k-pattern is generated from its (k−1)-subpatterns.
+
+    (Lemma 3.4 for non-cliques, Lemma 3.5 + Alg 4 for cliques; together
+    Theorem 3.6.) We feed ALL connected (k−1)-subpatterns of `pat` as the
+    'frequent' set; `pat` must appear among the candidates.
+    """
+    subs = dedupe_patterns(_connected_subpatterns(pat))
+    assume(len(subs) > 0)
+    cands = generate_new_patterns(subs, downward_closure=False)
+    keys = {canonical_key(c) for c in cands}
+    assert canonical_key(pat) in keys
+
+
+@settings(max_examples=60, deadline=None)
+@given(patterns(min_k=3, max_k=5))
+def test_candidates_are_valid(pat):
+    subs = dedupe_patterns(_connected_subpatterns(pat))
+    assume(len(subs) > 0)
+    cands = generate_new_patterns(subs, downward_closure=False)
+    # no duplicates, all connected, all one vertex larger
+    keys = [canonical_key(c) for c in cands]
+    assert len(keys) == len(set(keys))
+    for c in cands:
+        assert c.k == pat.k
+        assert c.is_connected()
+
+
+def test_clique_generation_triangle_to_4clique():
+    """Lemma 3.5 shape: 4-clique requires three 3-cliques (paper Fig 8)."""
+    tri = pattern_from_edges([0, 0, 0], [(0, 1), (1, 2), (0, 2)], bidir=True)
+    cands = generate_new_patterns([tri], downward_closure=True)
+    four_cliques = [c for c in cands if c.k == 4 and c.is_clique()]
+    assert len(four_cliques) >= 1
+
+
+def test_clique_generation_blocked_when_subclique_missing():
+    """A 4-clique candidate is discarded if a 3-subclique isn't frequent."""
+    # two distinct 3-patterns that are NOT both cliques cannot complete one
+    tri = pattern_from_edges([0, 0, 1], [(0, 1), (1, 2), (0, 2)], bidir=True)
+    path = pattern_from_edges([0, 0, 1], [(0, 1), (1, 2)], bidir=True)
+    cands = generate_new_patterns([path], downward_closure=True)
+    assert not any(c.is_clique() and c.k == 4 for c in cands)
+    del tri
+
+
+def test_merge_with_automorphism_paper_fig7():
+    """Paper Fig 7: merging C^u4 with itself under the Γ-automorphism that
+    swaps the two red triangle vertices yields BOTH 5-vertex variants."""
+    # P: triangle u1(blue), u2(red), u3(red) + pendant u4(green) on u2
+    P = pattern_from_edges(
+        [0, 1, 1, 2],
+        [(0, 1), (1, 2), (0, 2), (1, 3)],
+        bidir=True,
+    )
+    cands = generate_new_patterns([P], downward_closure=False)
+    five = [c for c in cands if c.k == 5]
+    # among them: two greens on same red (Fig 7b-left) and greens on the two
+    # different reds (Fig 7b-right)
+    def degree_multiset(c):
+        und = c.undirected_adj()
+        greens = [i for i in range(c.k) if c.labels[i] == 2]
+        reds = [i for i in range(c.k) if c.labels[i] == 1]
+        # count greens attached per red
+        counts = sorted(int(sum(und[g, r] for g in greens)) for r in reds)
+        return tuple(counts)
+
+    shapes = {degree_multiset(c) for c in five if (c.labels == 2).sum() == 2}
+    assert (0, 2) in shapes  # both pendants on one red
+    assert (1, 1) in shapes  # pendants split across reds (automorphism case)
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns(min_k=3, max_k=4))
+def test_edge_extension_also_complete_per_edge(pat):
+    """The baseline generator grows by one edge; any pattern with e+1 edges
+    is reachable from one of its e-edge connected sub-patterns."""
+    edges = pat.edges()
+    assume(len(edges) >= 2)
+    # remove one edge keeping connectivity
+    for (i, j) in edges:
+        adj = pat.adj.copy()
+        adj[i, j] = False
+        smaller = Pattern(adj, pat.labels)
+        und = smaller.undirected_adj()
+        if not smaller.is_connected():
+            continue
+        cands = edge_extension_candidates([smaller], pat.labels.tolist())
+        keys = {canonical_key(c) for c in cands}
+        assert canonical_key(pat) in keys
+        return

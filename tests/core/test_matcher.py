@@ -1,0 +1,109 @@
+"""JAX frontier matcher vs the brute-force host oracle (property tests)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, assume, HealthCheck
+
+from repro.core import MatchConfig, make_plan, match_block
+from repro.core.graph import DeviceGraph
+from repro.core.matcher import edge_exists
+from repro.core.metrics import enumerate_embeddings_host
+from tests.conftest import patterns, data_graphs
+
+
+def _all_embeddings(g, pat, cfg):
+    """Run every root block; return embeddings in pattern-vertex order."""
+    dg = DeviceGraph.from_host(g)
+    plan = make_plan(pat, g)
+    rows = []
+    total_found = 0
+    overflow = False
+    for b in range(0, g.n, cfg.root_block):
+        emb, count, found, ovf = match_block(dg, plan, jnp.int32(b), cfg)
+        c = int(count)
+        total_found += int(found)
+        overflow |= bool(ovf)
+        if c:
+            rows.append(np.asarray(emb[:c]))
+    got = np.concatenate(rows, 0) if rows else np.zeros((0, pat.k), np.int32)
+    inv = np.argsort(np.array(plan.order))
+    return got[:, inv], total_found, overflow
+
+
+@settings(max_examples=60, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=16), patterns(min_k=2, max_k=4))
+def test_matcher_matches_oracle(g, pat):
+    cfg = MatchConfig.for_graph(g, cap=4096, root_block=8, chunk=4)
+    got, found, overflow = _all_embeddings(g, pat, cfg)
+    assume(not overflow)
+    oracle = enumerate_embeddings_host(g, pat)
+    got_set = set(map(tuple, got.tolist()))
+    oracle_set = set(map(tuple, oracle.tolist()))
+    assert got_set == oracle_set
+    assert found == len(oracle_set)
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=14), patterns(min_k=2, max_k=3))
+def test_matcher_chunk_size_invariant(g, pat):
+    """Chunked gathers must not change results across chunk geometries."""
+    base = None
+    for chunk in (1, 3, 8):
+        cfg = MatchConfig.for_graph(g, cap=4096, root_block=16, chunk=chunk)
+        got, _, overflow = _all_embeddings(g, pat, cfg)
+        assume(not overflow)
+        s = set(map(tuple, got.tolist()))
+        if base is None:
+            base = s
+        else:
+            assert s == base
+
+
+def test_overflow_flag_and_clipping():
+    """Tiny cap: matcher must flag overflow and never exceed capacity."""
+    # star graph: hub label 0, many leaves label 1 — k=2 pattern explodes
+    n = 40
+    labels = [0] + [1] * (n - 1)
+    edges = [(0, i) for i in range(1, n)]
+    from repro.core import build_graph, pattern_from_edges
+
+    g = build_graph(n, edges, labels)
+    pat = pattern_from_edges([0, 1], [(0, 1)])
+    cfg = MatchConfig.for_graph(g, cap=8, root_block=64, chunk=4)
+    dg = DeviceGraph.from_host(g)
+    plan = make_plan(pat, g)
+    emb, count, found, ovf = match_block(dg, plan, jnp.int32(0), cfg)
+    assert bool(ovf)
+    assert int(count) == 8
+    assert int(found) == n - 1
+
+
+def test_edge_exists_bisect():
+    rng = np.random.default_rng(3)
+    n = 50
+    m = rng.random((n, n)) < 0.15
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    from repro.core import build_graph
+
+    g = build_graph(n, np.stack([src, dst], 1), np.zeros(n, np.int32))
+    dg = DeviceGraph.from_host(g)
+    u = jnp.asarray(rng.integers(0, n, size=500), jnp.int32)
+    v = jnp.asarray(rng.integers(0, n, size=500), jnp.int32)
+    iters = MatchConfig.for_graph(g).bisect_iters
+    got = np.asarray(edge_exists(dg.out_indptr, dg.out_indices, u, v, iters))
+    want = m[np.asarray(u), np.asarray(v)]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_directed_vs_bidirectional_patterns():
+    """A→B must not match where only B→A exists."""
+    from repro.core import build_graph, pattern_from_edges
+
+    g = build_graph(2, [(1, 0)], [0, 1])
+    cfg = MatchConfig.for_graph(g, cap=16, root_block=4, chunk=2)
+    pat_fwd = pattern_from_edges([0, 1], [(0, 1)])  # A→B
+    pat_bwd = pattern_from_edges([0, 1], [], bidir=False).with_edge(1, 0)  # B→A
+    got_f, _, _ = _all_embeddings(g, pat_fwd, cfg)
+    got_b, _, _ = _all_embeddings(g, pat_bwd, cfg)
+    assert got_f.shape[0] == 0
+    assert got_b.shape[0] == 1

@@ -1,0 +1,81 @@
+"""MNI / fractional metrics vs paper ground truth + orderings."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, assume, HealthCheck
+
+from repro.core import build_graph, paper_fig1
+from repro.core import metrics as M
+from tests.conftest import patterns, data_graphs
+
+
+def _pad(embs, cap):
+    k = embs.shape[1]
+    out = np.full((cap, k), -1, np.int32)
+    out[: embs.shape[0]] = embs
+    return jnp.asarray(out), jnp.int32(embs.shape[0])
+
+
+def test_mni_paper_fig1():
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = M.enumerate_embeddings_host(g, p1)
+    emb, n_valid = _pad(embs, 16)
+    st = M.mni_update(M.mni_init(3, 7), emb, n_valid, 3)
+    assert int(M.mni_value(st)) == 3  # paper §2.4.4: F(u2)={d5,d6,d7} → 3
+
+
+def test_frac_paper_fig1_below_mni():
+    """§2.4.5: fractional reduces MNI's overestimate (MNI=3, MIS=2)."""
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = M.enumerate_embeddings_host(g, p1)
+    emb, n_valid = _pad(embs, 16)
+    st = M.frac_update(M.frac_init(3, 7), emb, n_valid, 3)
+    v = float(M.frac_value(st))
+    assert v <= 3.0
+
+
+@settings(max_examples=50, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=14), patterns(min_k=2, max_k=3))
+def test_metric_chain_mis_le_frac_le_mni(g, pat):
+    """exact-MIS ≤ MNI and frac ≤ MNI (frac vs MIS can go either way in
+    degenerate graphs, but MNI is always the ceiling)."""
+    embs = M.enumerate_embeddings_host(g, pat, cap=3000)
+    assume(embs.shape[0] <= 40)
+    if embs.shape[0] == 0:
+        return
+    emb, n_valid = _pad(embs, max(16, embs.shape[0]))
+    mni = int(M.mni_value(M.mni_update(M.mni_init(pat.k, g.n), emb, n_valid, pat.k)))
+    frac = float(M.frac_value(M.frac_update(M.frac_init(pat.k, g.n), emb, n_valid, pat.k)))
+    mis = M.exact_mis(embs)
+    assert mis <= mni
+    assert frac <= mni + 1e-5
+
+
+def test_incremental_mni_equals_oneshot():
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = M.enumerate_embeddings_host(g, p1)
+    st1 = M.mni_init(3, 7)
+    emb, n_valid = _pad(embs, 16)
+    st1 = M.mni_update(st1, emb, n_valid, 3)
+    st2 = M.mni_init(3, 7)
+    for half in (embs[:2], embs[2:]):
+        emb_h, nv = _pad(half, 16)
+        st2 = M.mni_update(st2, emb_h, nv, 3)
+    np.testing.assert_array_equal(np.asarray(st1), np.asarray(st2))
+
+
+def test_exact_mis_simple_cases():
+    # disjoint embeddings -> all count
+    embs = np.array([[0, 1], [2, 3], [4, 5]], np.int32)
+    assert M.exact_mis(embs) == 3
+    # chain conflicts: {0,1},{1,2},{2,3} -> pick 1st & 3rd
+    embs = np.array([[0, 1], [1, 2], [2, 3]], np.int32)
+    assert M.exact_mis(embs) == 2
+    # paper Fig 4 tightness: hub mapping blocks all four spokes
+    spokes = np.array([[0, 4, 5, 6], [1, 7, 8, 9], [2, 10, 11, 12], [3, 13, 14, 15]])
+    hub = np.array([[0, 1, 2, 3]])
+    embs = np.concatenate([hub, spokes]).astype(np.int32)
+    assert M.exact_mis(embs) == 4  # MIS picks the four spokes
+    assert len(M.greedy_mis_host(embs)) == 1  # greedy picks the hub: m=1, M=m·n

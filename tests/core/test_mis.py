@@ -1,0 +1,123 @@
+"""mIS metric — Theorem 3.1 bounds, greedy/Luby equivalence, paper values."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, assume, HealthCheck
+
+from repro.core import MatchConfig, make_plan, match_block, paper_fig1, build_graph
+from repro.core.graph import DeviceGraph
+from repro.core import mis as mis_lib
+from repro.core.metrics import (
+    enumerate_embeddings_host,
+    exact_mis,
+    greedy_mis_host,
+)
+from tests.conftest import patterns, data_graphs
+
+BIG = jnp.int32(2**30)
+
+
+def _emb_block(embs, cap):
+    k = embs.shape[1] if embs.ndim == 2 else 1
+    out = np.full((cap, max(k, 1)), -1, np.int32)
+    if embs.shape[0]:
+        out[: embs.shape[0]] = embs
+    return jnp.asarray(out), jnp.int32(embs.shape[0])
+
+
+def _device_greedy(embs, n, k, tau=None):
+    cap = max(16, embs.shape[0])
+    emb, cnt = _emb_block(embs, cap)
+    bm, c = mis_lib.mis_greedy_update(
+        mis_lib.bitmap_init(n), jnp.int32(0), emb, cnt,
+        BIG if tau is None else jnp.int32(tau), k)
+    return np.asarray(bm), int(c)
+
+
+def _device_luby(embs, n, k, tau=None):
+    cap = max(16, embs.shape[0])
+    emb, cnt = _emb_block(embs, cap)
+    bm, c = mis_lib.mis_luby_update(
+        mis_lib.bitmap_init(n), jnp.int32(0), emb, cnt,
+        BIG if tau is None else jnp.int32(tau), k, n)
+    return np.asarray(bm), int(c)
+
+
+def test_paper_fig1_values():
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = enumerate_embeddings_host(g, p1)
+    assert exact_mis(embs) == 2           # paper: MIS = 2 (Fig 3d)
+    _, m = _device_greedy(embs, 7, 3)
+    assert m in (1, 2)                     # paper: mIS gives 1 or 2 (Fig 3c/3d)
+    assert m == len(greedy_mis_host(embs))
+
+
+@settings(max_examples=60, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=14), patterns(min_k=2, max_k=3))
+def test_theorem_3_1_bounds(g, pat):
+    """m ≤ M ≤ m·n for maximal m, maximum M, pattern size n."""
+    embs = enumerate_embeddings_host(g, pat, cap=3000)
+    assume(embs.shape[0] <= 40)
+    if embs.shape[0] == 0:
+        return
+    M = exact_mis(embs)
+    _, m = _device_greedy(embs, g.n, pat.k)
+    assert m <= M <= m * pat.k
+
+
+@settings(max_examples=60, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=16), patterns(min_k=2, max_k=3))
+def test_greedy_equals_luby_complete(g, pat):
+    """Run to completion: both implementations give the lexicographic MIS."""
+    embs = enumerate_embeddings_host(g, pat, cap=5000)
+    assume(embs.shape[0] <= 600)
+    bm1, c1 = _device_greedy(embs, g.n, pat.k)
+    bm2, c2 = _device_luby(embs, g.n, pat.k)
+    assert c1 == c2
+    np.testing.assert_array_equal(bm1, bm2)
+    # and both equal the host greedy oracle
+    assert c1 == len(greedy_mis_host(embs))
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(max_n=14), patterns(min_k=2, max_k=3))
+def test_selection_is_independent_and_maximal(g, pat):
+    embs = enumerate_embeddings_host(g, pat, cap=5000)
+    assume(0 < embs.shape[0] <= 600)
+    bm, c = _device_greedy(embs, g.n, pat.k)
+    # reconstruct used-vertex set from bitmap
+    used = set()
+    for w, word in enumerate(bm):
+        for b in range(32):
+            if word & np.uint32(1 << b):
+                used.add(w * 32 + b)
+    # independence: #used vertices == c * k (all distinct)
+    assert len(used) == c * pat.k
+    # maximality: no remaining embedding is fully outside `used`
+    for row in embs:
+        assert set(map(int, row)) & used, "non-maximal selection"
+
+
+def test_early_exit_tau():
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = enumerate_embeddings_host(g, p1)
+    for tau in (1, 2):
+        _, c1 = _device_greedy(embs, 7, 3, tau=tau)
+        _, c2 = _device_luby(embs, 7, 3, tau=tau)
+        assert c1 == tau and c2 == tau
+
+
+def test_cross_block_state_carrying():
+    """Feeding embeddings in two chunks must equal one-shot selection."""
+    p1, edges, labels = paper_fig1()
+    g = build_graph(7, edges, labels)
+    embs = enumerate_embeddings_host(g, p1)
+    bm_all, c_all = _device_greedy(embs, 7, 3)
+    bm = mis_lib.bitmap_init(7)
+    cnt = jnp.int32(0)
+    for half in (embs[:3], embs[3:]):
+        emb, n_valid = _emb_block(half, 8)
+        bm, cnt = mis_lib.mis_greedy_update(bm, cnt, emb, n_valid, BIG, 3)
+    assert int(cnt) == c_all
+    np.testing.assert_array_equal(np.asarray(bm), bm_all)

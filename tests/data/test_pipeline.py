@@ -1,0 +1,85 @@
+"""Synthetic data + neighbor sampler tests."""
+import numpy as np
+
+from repro.data.sampler import NeighborSampler
+from repro.data.synthetic import (
+    PAPER_DATASETS, dlrm_batches, paper_dataset, rmat_graph, token_stream,
+)
+
+
+def test_rmat_sizes_and_determinism():
+    g1 = rmat_graph(500, 3000, n_labels=4, seed=7)
+    g2 = rmat_graph(500, 3000, n_labels=4, seed=7)
+    assert g1.n == 500
+    assert 0 < g1.n_edges <= 3000
+    np.testing.assert_array_equal(g1.labels, g2.labels)
+    np.testing.assert_array_equal(g1.out_indices, g2.out_indices)
+    # degree skew exists (power-law-ish): max degree >> mean
+    deg = np.diff(g1.out_indptr)
+    assert deg.max() >= 4 * max(deg.mean(), 1)
+
+
+def test_paper_dataset_scaling():
+    g = paper_dataset("gnutella", scale=0.05)
+    cfg = PAPER_DATASETS["gnutella"]
+    assert abs(g.n - cfg["n"] * 0.05) < 16
+    assert g.n_labels == cfg["n_labels"]
+    assert g.undirected
+
+
+def test_token_stream_resumable():
+    s1 = token_stream(100, 2, 8, seed=3)
+    batches = [next(s1) for _ in range(5)]
+    s2 = token_stream(100, 2, 8, seed=3, start_step=3)
+    t3 = next(s2)
+    np.testing.assert_array_equal(batches[3][0], t3[0])
+    np.testing.assert_array_equal(batches[3][1], t3[1])
+    # targets are next-token shifted
+    tok, tgt = batches[0]
+    assert tok.shape == tgt.shape == (2, 8)
+
+
+def test_dlrm_batches():
+    from repro.configs.recsys import REDUCED
+
+    it = dlrm_batches(REDUCED, 16, seed=1)
+    b = next(it)
+    assert b["dense"].shape == (16, REDUCED.n_dense)
+    assert b["sparse_idx"].shape == (16, REDUCED.n_sparse, REDUCED.n_hot)
+    assert b["sparse_idx"].max() < REDUCED.table_rows
+    assert set(np.unique(b["labels"])) <= {0, 1}
+
+
+def test_neighbor_sampler_block_validity():
+    g = rmat_graph(300, 2500, n_labels=2, seed=2)
+    s = NeighborSampler(g, fanout=(5, 3), batch_nodes=32, seed=0)
+    blk = s.sample(step=0)
+    # static caps respected
+    assert blk.node_ids.shape == (s.node_cap,)
+    assert blk.edge_src.shape == (s.edge_cap,)
+    n, e = blk.n_real_nodes, blk.n_real_edges
+    assert 0 < n <= s.node_cap and 0 <= e <= s.edge_cap
+    # local indices in range; every edge endpoint is a real node
+    assert blk.edge_src[:e].max() < n and blk.edge_dst[:e].max() < n
+    # seeds are exactly the loss nodes
+    assert blk.node_mask.sum() == 32
+    # fanout bound: each seed aggregates ≤ fanout[0] messages at hop 1
+    # (dst side of hop-1 edges are seeds)
+    hop1_dst = blk.edge_dst[:32 * 5]
+    # determinism
+    blk2 = s.sample(step=0)
+    np.testing.assert_array_equal(blk.node_ids, blk2.node_ids)
+    blk3 = s.sample(step=1)
+    assert not np.array_equal(blk.node_ids, blk3.node_ids)
+
+
+def test_sampler_edges_point_neighbor_to_seed():
+    g = rmat_graph(200, 1500, n_labels=2, seed=5)
+    s = NeighborSampler(g, fanout=(4,), batch_nodes=16, seed=1)
+    blk = s.sample(0)
+    e = blk.n_real_edges
+    for i in range(min(e, 50)):
+        src_g = blk.node_ids[blk.edge_src[i]]
+        dst_g = blk.node_ids[blk.edge_dst[i]]
+        # sampled from dst's out-neighborhood: (dst → src) is a graph edge
+        assert g.has_edge(int(dst_g), int(src_g))

@@ -1,0 +1,99 @@
+"""Checkpoint atomicity / resume / retention / async."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import resume_or_init
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 9, (2,)), jnp.int32)},
+    }
+
+
+def _assert_tree_equal(x, y):
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        x, y)
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 3, t, extra={"data_step": 4})
+    got, extra, step = ckpt.restore(tmp_path, jax.eval_shape(lambda: t))
+    assert step == 3 and extra == {"data_step": 4}
+    _assert_tree_equal(t, got)
+
+
+def test_partial_write_is_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    # forge a later, uncommitted (crashed) checkpoint
+    bad = tmp_path / "step_00000002"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert ckpt.latest_step(tmp_path) == 1
+    got, _, step = ckpt.restore(tmp_path, jax.eval_shape(lambda: t))
+    assert step == 1
+    _assert_tree_equal(t, got)
+
+
+def test_retention(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ckpt.save(tmp_path, s, t, keep_last=2)
+    committed = sorted(p.name for p in tmp_path.glob("step_*")
+                       if (p / "COMMIT").exists())
+    assert committed == ["step_00000004", "step_00000005"]
+
+
+def test_async_save(tmp_path):
+    t = _tree()
+    th = ckpt.save_async(tmp_path, 7, t)
+    th.join()
+    got, _, step = ckpt.restore(tmp_path, jax.eval_shape(lambda: t))
+    assert step == 7
+    _assert_tree_equal(t, got)
+
+
+def test_resume_or_init(tmp_path):
+    t = _tree(5)
+    abstract = jax.eval_shape(lambda: t)
+    got, extra, start = resume_or_init(tmp_path, lambda: t, abstract)
+    assert start == 0
+    ckpt.save(tmp_path, 9, t, extra={"data_step": 10})
+    got, extra, start = resume_or_init(tmp_path, lambda: _tree(1), abstract)
+    assert start == 10
+    _assert_tree_equal(t, got)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 0, _tree())
+    wrong = {"a": jax.ShapeDtypeStruct((5, 3), jnp.float32),
+             "nested": {"b": jax.ShapeDtypeStruct((2,), jnp.int32)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, wrong)
+
+
+def test_restore_with_shardings(tmp_path):
+    """Elastic path: restore re-shards (trivially, on 1 device)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    t = _tree()
+    ckpt.save(tmp_path, 0, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), jax.eval_shape(lambda: t))
+    got, _, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: t),
+                             shardings=sh)
+    _assert_tree_equal(t, got)
