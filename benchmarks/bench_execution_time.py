@@ -1,10 +1,17 @@
 """Paper Fig 9/10 — execution time vs support, FLEXIS (λ sweep) vs the
-MNI (GraMi-like) and fractional (T-FSM-like) baselines, same runtime."""
+MNI (GraMi-like) and fractional (T-FSM-like) baselines, same runtime —
+plus the batched-vs-sequential data-plane comparison (PR 1 tentpole):
+host-loop wall time for one level of ≥ 16 same-k candidates.
+"""
 from __future__ import annotations
 
-from .common import BENCH_DATASETS, emit, run_mine
+import time
 
-SUPPORTS = (6, 8, 12)
+import numpy as np
+
+from .common import BENCH_DATASETS, SMOKE, bench_iters, emit, run_mine
+
+SUPPORTS = (6,) if SMOKE else (6, 8, 12)
 VARIANTS = [
     ("flexis_0.4", dict(metric="mis", lam=0.4, generation="merge")),
     ("flexis_1.0", dict(metric="mis", lam=1.0, generation="merge")),
@@ -13,8 +20,70 @@ VARIANTS = [
 ]
 
 
+def _bounded_degree_graph(n: int, deg: int, n_labels: int, seed: int = 0):
+    """No hubs ⇒ MatchConfig.for_graph right-sizes to a small-work geometry
+    where per-block device compute is tiny and the host loop (dispatch +
+    per-block sync) dominates — the regime the batched plane amortizes."""
+    from repro.core import build_graph
+
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, n * deg)
+    labels = rng.integers(0, n_labels, n)
+    return build_graph(n, np.stack([src, dst], 1), labels, undirected=True)
+
+
+def _bench_batched_level(rows):
+    from repro.core import MatchConfig, MiningConfig
+    from repro.core.batched import evaluate_level_batched
+    from repro.core.flexis import evaluate_pattern, initial_candidates, tau_threshold
+    from repro.core.graph import DeviceGraph
+
+    n = 2000 if SMOKE else 8000
+    g = _bounded_degree_graph(n, deg=2, n_labels=8)
+    dev_g = DeviceGraph.from_host(g)
+    cfg = MatchConfig.for_graph(g, cap=64, root_block=64)
+    reps = bench_iters(3, smoke=1)
+
+    for P in (16, 32):
+        cands = initial_candidates(g)[:P]
+        assert len(cands) == P, f"graph yields only {len(cands)} candidates"
+        taus = [tau_threshold(8, 1.0, p.k) for p in cands]
+        seq_cfg = MiningConfig(sigma=8, lam=1.0, metric="mis", complete=True,
+                               match=cfg, execution="sequential")
+
+        # warmup compiles both data planes
+        seq = [evaluate_pattern(g, dev_g, p, t, seq_cfg)
+               for p, t in zip(cands, taus)]
+        bat, _, _ = evaluate_level_batched(
+            g, dev_g, cands, taus, "mis", cfg, complete=True)
+        assert [s.support for s in seq] == [o.support for o in bat]
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for p, t in zip(cands, taus):
+                evaluate_pattern(g, dev_g, p, t, seq_cfg)
+        t_seq = (time.perf_counter() - t0) / reps
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            evaluate_level_batched(g, dev_g, cands, taus, "mis", cfg,
+                                   complete=True)
+        t_bat = (time.perf_counter() - t0) / reps
+
+        rows.append({
+            "name": f"exec_time/batched_level/n{n}/P{P}",
+            "us_per_call": round(t_bat * 1e6, 1),
+            "derived": round(t_seq / t_bat, 2),   # speedup (x)
+            "sequential_us": round(t_seq * 1e6, 1),
+            "batched_us": round(t_bat * 1e6, 1),
+            "speedup": round(t_seq / t_bat, 2),
+        })
+
+
 def main() -> None:
     rows = []
+    _bench_batched_level(rows)
     for ds in BENCH_DATASETS:
         for sigma in SUPPORTS:
             for name, kw in VARIANTS:
@@ -26,7 +95,8 @@ def main() -> None:
                     "searched": res.searched,
                     "timed_out": res.timed_out,
                 })
-    emit(rows, ["name", "us_per_call", "derived", "searched", "timed_out"])
+    emit(rows, ["name", "us_per_call", "derived", "searched", "timed_out",
+                "sequential_us", "batched_us", "speedup"])
 
 
 if __name__ == "__main__":

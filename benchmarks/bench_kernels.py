@@ -11,10 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit
+from .common import SMOKE, bench_iters, emit
 
 
 def _time(fn, *args, iters=20):
+    iters = bench_iters(iters)
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         fn(*args).block_until_ready()
     t0 = time.perf_counter()
@@ -68,6 +69,44 @@ def main() -> None:
     rows.append({"name": f"kernel/mis_luby/cap{cap}k{kk}",
                  "us_per_call": round(us, 1),
                  "derived": round(cap / (us * 1e-6) / 1e6, 3)})
+
+    # batched level step (PR 1 data plane): one vmapped program for a
+    # 16-pattern candidate batch vs 16 single-pattern dispatches
+    from repro.core import MatchConfig, build_graph
+    from repro.core.batched import _state_init, _step_fn
+    from repro.core.flexis import initial_candidates
+    from repro.core.graph import DeviceGraph
+    from repro.core.matcher import match_block
+    from repro.core.mis import bitmap_init, mis_greedy_update as mgu
+    from repro.core.plan import make_plan, stack_plans
+
+    bn = 1000 if SMOKE else 4000
+    src = np.repeat(np.arange(bn), 2)
+    dst = rng.integers(0, bn, bn * 2)
+    bg = build_graph(bn, np.stack([src, dst], 1),
+                     rng.integers(0, 8, bn), undirected=True)
+    dev_bg = DeviceGraph.from_host(bg)
+    mcfg = MatchConfig.for_graph(bg, cap=64, root_block=64)
+    pats = initial_candidates(bg)[:16]
+    plans = [make_plan(p, bg) for p in pats]
+    stacked = stack_plans(plans)
+    state = _state_init("mis", 16, 2, bn)
+    taus16 = jnp.full((16,), 10**9, jnp.int32)
+    step = _step_fn("mis", 2, mcfg)
+    us_b = _time(lambda: step(dev_bg, stacked, jnp.int32(0), state, taus16)[1])
+
+    def _sixteen_singles():
+        c = jnp.int32(0)
+        for plan in plans:
+            emb, n_valid, _, _ = match_block(dev_bg, plan, jnp.int32(0), mcfg)
+            _, c = mgu(bitmap_init(bn), jnp.int32(0), emb, n_valid,
+                       jnp.int32(10**9), 2)
+        return c
+
+    us_s = _time(_sixteen_singles)
+    rows.append({"name": "kernel/batched_step/P16",
+                 "us_per_call": round(us_b, 1),
+                 "derived": round(us_s / us_b, 2)})  # speedup vs 16 singles
 
     # embedding bag (jnp path)
     from repro.models.embedding import embedding_bag_apply, embedding_bag_init

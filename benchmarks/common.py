@@ -4,33 +4,45 @@ Every benchmark mirrors one paper artifact (DESIGN.md §7) on structure-
 matched synthetic stand-ins (scaled; labels were random in the paper too).
 CSV convention: ``name,us_per_call,derived`` per the harness contract, with
 additional artifact-specific columns after.
+
+Smoke mode (``benchmarks.run --smoke``, or env ``REPRO_BENCH_SMOKE=1``):
+tiny dataset scales and iteration counts so the whole harness finishes in
+CI-budget minutes — used by the non-blocking CI smoke job.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import os
 from typing import Dict, List, Optional
 
 from repro.core import MatchConfig, MiningConfig, mine
 from repro.core.flexis import MiningResult
 from repro.data.synthetic import paper_dataset
 
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
 # benches must run in CI-ish time on 1 CPU core: scaled datasets
-BENCH_SCALE = 0.02
-BENCH_DATASETS = ("gnutella", "wiki-vote")
+BENCH_SCALE = 0.005 if SMOKE else 0.02
+BENCH_DATASETS = ("gnutella",) if SMOKE else ("gnutella", "wiki-vote")
 BENCH_MAX_SIZE = 3
+
+
+def bench_iters(full: int, smoke: int = 2) -> int:
+    """Iteration count for timing loops, collapsed in smoke mode."""
+    return smoke if SMOKE else full
 
 
 def run_mine(dataset: str, *, sigma: int, lam: float = 0.4,
              metric: str = "mis", generation: str = "merge",
-             scale: float = BENCH_SCALE, max_size: int = BENCH_MAX_SIZE,
+             scale: Optional[float] = None, max_size: int = BENCH_MAX_SIZE,
              complete: bool = False, time_limit: float = 120.0,
-             seed: int = 0) -> MiningResult:
+             execution: str = "batched", seed: int = 0) -> MiningResult:
+    scale = BENCH_SCALE if scale is None else scale
     g = paper_dataset(dataset, scale=scale, seed=seed)
     cfg = MiningConfig(
         sigma=sigma, lam=lam, metric=metric, generation=generation,
         max_pattern_size=max_size, complete=complete,
-        time_limit_s=time_limit, match=MatchConfig.for_graph(g, cap=4096))
+        time_limit_s=time_limit, execution=execution,
+        match=MatchConfig.for_graph(g, cap=4096))
     return mine(g, cfg)
 
 

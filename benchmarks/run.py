@@ -1,12 +1,19 @@
 """Benchmark harness driver — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke] [--out CSV]
 
-Emits ``name,us_per_call,derived[,...]`` CSV blocks per benchmark.
+Emits ``name,us_per_call,derived[,...]`` CSV blocks per benchmark.  Exits
+nonzero if any benchmark module fails (or ``--only`` matches nothing).
+``--smoke`` collapses dataset scales/iteration counts to CI-budget sizes;
+``--out`` additionally tees all output to a CSV file (the CI smoke job
+uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import os
 import sys
 import time
 
@@ -21,28 +28,62 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+class _Tee(io.TextIOBase):
+    def __init__(self, *streams):
+        self._streams = streams
+
+    def write(self, s):
+        for st in self._streams:
+            st.write(s)
+        return len(s)
+
+    def flush(self):
+        for st in self._streams:
+            st.flush()
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / few iters (CI smoke job)")
+    ap.add_argument("--out", default=None,
+                    help="also write all output to this CSV file")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # must be set before benchmark modules import benchmarks.common
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     import importlib
 
+    out_file = open(args.out, "w") if args.out else None
+    stdout = _Tee(sys.stdout, out_file) if out_file else sys.stdout
+
     failures = 0
-    for label, modname in BENCHES:
-        if args.only and args.only not in modname:
-            continue
-        print(f"# === {label} [{modname}] ===", flush=True)
-        t0 = time.monotonic()
-        try:
-            importlib.import_module(modname).main()
-        except Exception as e:  # surface but keep going
+    matched = 0
+    with contextlib.redirect_stdout(stdout):
+        for label, modname in BENCHES:
+            if args.only and args.only not in modname:
+                continue
+            matched += 1
+            print(f"# === {label} [{modname}] ===", flush=True)
+            t0 = time.monotonic()
+            try:
+                importlib.import_module(modname).main()
+            except Exception as e:  # surface but keep going
+                failures += 1
+                print(f"# FAILED: {e!r}", flush=True)
+            print(f"# ({time.monotonic() - t0:.1f}s)", flush=True)
+        if args.only and matched == 0:
+            print(f"# ERROR: --only {args.only!r} matched no benchmark",
+                  flush=True)
             failures += 1
-            print(f"# FAILED: {e!r}", flush=True)
-        print(f"# ({time.monotonic() - t0:.1f}s)", flush=True)
-    if failures:
-        sys.exit(1)
+    if out_file:
+        out_file.close()
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,23 +1,45 @@
-"""Batched-pattern matching — beyond-paper optimization #2 (§Perf).
+"""Batched level-wise mining — the default data plane of ``mine()``.
 
-The paper (and our baseline loop) evaluates candidate patterns one at a
-time; but a mining level holds tens-to-hundreds of same-size candidates,
-and `match_block` is pure dataflow over *plan arrays* — so an entire level
-can be vmapped into ONE device program: plans stack into a leading pattern
-axis, the data graph broadcasts, and the mIS bitmaps/counters batch too.
+The paper's loop (and our ``execution="sequential"`` oracle) evaluates
+candidate patterns one device program at a time; but a mining level holds
+tens-to-hundreds of same-size candidates, and ``match_block`` is pure
+dataflow over *plan arrays* — so an entire level runs as ONE device program:
+plans stack into a leading pattern axis (``plan.stack_plans``), the data
+graph broadcasts, ``match_block`` runs under ``vmap``, and the metric state
+(mIS bitmaps/counters, MNI image tables, fractional count tables) batches
+along the same axis.
 
 Wins: (CPU) dispatch amortization across candidates; (TPU) one big program
 with pattern-level parallelism instead of many small ones — and under
-shard_map the pattern axis is a free extra parallelism dimension.
+shard_map the pattern axis is a free extra parallelism dimension
+(``core/distributed.py``).
 
-Early exit: patterns that reach τ keep computing until the *block* loop
-notices (masked out of the `active` set on the host) — wasted work is at
-most one block per finished pattern, repaid many times over by batching.
+τ early exit stays *per pattern*: after every root block the host reads the
+batched support values, snapshots finished patterns out of the active set,
+and — once the active set has halved — re-stacks the survivors into a
+smaller power-of-two bucket.  A finished pattern therefore wastes at most
+one extra block of masked work (its ``count < τ`` guard freezes all state
+updates), repaid many times over by batching; and bucketing bounds
+recompilation at log2(P) shapes per (k, geometry).
+
+Per-pattern results are bit-identical to the sequential oracle for the
+``mis``, ``mis_luby``, ``mni`` and ``frac`` metrics because each pattern
+sees the exact same (block, update) history; ``mis_exact`` (host-side
+branch & bound) falls back to the sequential path.  This equivalence is
+property-tested in ``tests/core/test_batched_equivalence.py``.
+
+Compiled programs are cached: one executable per (metric, k, match
+geometry) python callable (``_step_fn`` below), with XLA's jit cache keying
+the remaining shape axes (pattern-bucket size P, graph size).  Levels and
+whole mining runs reuse executables instead of re-tracing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import functools
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,40 +47,331 @@ import numpy as np
 
 from .graph import DataGraph, DeviceGraph
 from .pattern import Pattern
-from .plan import PatternPlan, make_plan
-from .matcher import MatchConfig, match_block
+from .plan import PatternPlan, make_plan, stack_plans
+from .matcher import MatchConfig, match_block, transient_match_bytes
 from . import mis as mis_lib
+from . import metrics as metrics_lib
 
-__all__ = ["stack_plans", "batched_mis_supports"]
+__all__ = [
+    "BatchedResult", "PatternOutcome", "batched_mis_supports",
+    "evaluate_level_batched", "program_cache_stats", "clear_program_cache",
+    "stack_plans",
+]
+
+_BATCHABLE_METRICS = ("mis", "mis_luby", "mni", "frac")
+# metrics whose sequential loop early-exits on support >= tau
+_EARLY_EXIT_METRICS = ("mis", "mis_luby", "mni")
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+# default ceiling on the pattern axis: transient match memory is
+# O(P · cap · chunk), so an unbounded level (hundreds of candidates) would
+# multiply device footprint by hundreds; 64 keeps the dispatch win while
+# bounding memory and the set of compiled bucket shapes.
+DEFAULT_MAX_BATCH = 64
 
 
-def stack_plans(plans: Sequence[PatternPlan]) -> PatternPlan:
-    """Stack same-k plans into one plan pytree with a leading pattern axis."""
-    k = plans[0].k
-    assert all(p.k == k for p in plans), "plans must share pattern size"
-    leaves = [jax.tree_util.tree_flatten(p)[0] for p in plans]
-    treedef = jax.tree_util.tree_flatten(plans[0])[1]
-    stacked = [jnp.stack([l[i] for l in leaves]) for i in range(len(leaves[0]))]
-    return jax.tree_util.tree_unflatten(treedef, stacked)
+# ---------------------------------------------------------------------------
+# compiled-program cache: one traced step per (metric, k, match geometry)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _step_fn(metric: str, k: int, cfg: MatchConfig):
+    """Jitted batched block step.
+
+    Signature of the returned callable:
+        step(dev_g, plans, block_start, state, taus)
+            -> (state', values, found, overflowed)
+    where every per-pattern array carries a leading P axis and `values` is
+    the metric's running support (int32 counts for mis/*, int32 MNI minima,
+    float32 fractional mass).
+    """
+
+    if metric in ("mis", "mis_luby"):
+
+        def step(g, plans, block_start, state, taus):
+            bitmaps, counts = state
+
+            def one(plan, bm, cnt, tau):
+                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
+                if metric == "mis":
+                    bm, cnt = mis_lib.mis_greedy_update(
+                        bm, cnt, emb, n_valid, tau, k)
+                else:
+                    bm, cnt = mis_lib.mis_luby_update(
+                        bm, cnt, emb, n_valid, tau, k, g.n)
+                return bm, cnt, found, ovf
+
+            bitmaps, counts, found, ovf = jax.vmap(one)(
+                plans, bitmaps, counts, taus)
+            return (bitmaps, counts), counts, found, ovf
+
+    elif metric == "mni":
+
+        def step(g, plans, block_start, state, taus):
+            del taus  # MNI needs no device-side τ; the host owns early exit
+
+            def one(plan, images):
+                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
+                images = metrics_lib.mni_update(images, emb, n_valid, k)
+                return images, metrics_lib.mni_value(images), found, ovf
+
+            state, values, found, ovf = jax.vmap(one)(plans, state)
+            return state, values, found, ovf
+
+    elif metric == "frac":
+
+        def step(g, plans, block_start, state, taus):
+            del taus
+
+            def one(plan, counts):
+                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
+                counts = metrics_lib.frac_update(counts, emb, n_valid, k)
+                return counts, metrics_lib.frac_value(counts), found, ovf
+
+            state, values, found, ovf = jax.vmap(one)(plans, state)
+            return state, values, found, ovf
+
+    else:
+        raise ValueError(f"metric {metric!r} has no batched step")
+
+    return jax.jit(step)
+
+
+def program_cache_stats():
+    """lru_cache stats of the batched step-program cache (hits = executable
+    reuse across levels/runs; misses = distinct (metric, k, geometry))."""
+    return _step_fn.cache_info()
+
+
+def clear_program_cache() -> None:
+    _step_fn.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# batched metric state
+# ---------------------------------------------------------------------------
+
+def _state_init(metric: str, P: int, k: int, n: int):
+    if metric in ("mis", "mis_luby"):
+        return (jnp.zeros((P, mis_lib.bitmap_words(n)), jnp.uint32),
+                jnp.zeros((P,), jnp.int32))
+    if metric == "mni":
+        return jnp.zeros((P, k, n), jnp.bool_)
+    if metric == "frac":
+        return jnp.zeros((P, k, n), jnp.float32)
+    raise ValueError(metric)
+
+
+def _state_bytes(metric: str, k: int, n: int) -> int:
+    """Per-pattern metric-state footprint (telemetry)."""
+    if metric in ("mis", "mis_luby"):
+        return mis_lib.bitmap_words(n) * 4 + 4 + (n * 4 if metric == "mis_luby" else 0)
+    if metric == "mni":
+        return k * n
+    if metric == "frac":
+        return k * n * 4
+    return 0
+
+
+def _gather_rows(tree, sel: np.ndarray):
+    idx = jnp.asarray(sel, jnp.int32)
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+
+def _bucket_size(n_active: int) -> int:
+    return max(1, 1 << max(0, math.ceil(math.log2(max(n_active, 1)))))
+
+
+# ---------------------------------------------------------------------------
+# level executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PatternOutcome:
+    """Per-pattern result of a batched level — mirrors the sequential
+    ``evaluate_pattern`` outputs field-for-field."""
+    support: int
+    frequent: bool
+    embeddings_found: int
+    overflowed: bool
+    blocks_run: int
 
 
 @dataclasses.dataclass
 class BatchedResult:
-    supports: np.ndarray          # (P,) mIS counts (≥ tau ⇒ frequent)
+    supports: np.ndarray          # (P,) metric supports (≥ tau ⇒ frequent)
     found: np.ndarray             # (P,) embeddings enumerated
     overflowed: np.ndarray        # (P,) bool
 
 
-def _batched_block(g: DeviceGraph, plans: PatternPlan, block_start,
-                   bitmaps, counts, taus, k: int, cfg: MatchConfig):
-    def one(plan, bitmap, count, tau):
-        emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
-        bitmap, count = mis_lib.mis_greedy_update(
-            bitmap, count, emb, n_valid, tau, k)
-        return bitmap, count, found, ovf
+def _mine_group(
+    dev_g: DeviceGraph,
+    plans: List[PatternPlan],
+    taus: Sequence[int],
+    metric: str,
+    cfg: MatchConfig,
+    *,
+    complete: bool,
+    n: int,
+    deadline: Optional[float] = None,
+) -> Tuple[List[Optional[PatternOutcome]], bool]:
+    """Run one same-k candidate group level-wise; returns (outcomes, timed_out).
 
-    return jax.vmap(one, in_axes=(0, 0, 0, 0))(plans, bitmaps, counts, taus)
+    Per-pattern histories reproduce the sequential loop exactly: a pattern
+    accumulates (found, overflowed, blocks) for precisely the block prefix the
+    sequential loop would have run, and its support is snapshotted at the
+    block where it crosses τ (or at the end, for complete runs).
 
+    On a timeout, only patterns that *finished* (reached τ, or ran every
+    block) get an outcome; still-in-flight patterns return ``None`` — the
+    sequential loop's all-or-nothing timeout contract, where a pattern is
+    either fully evaluated or not reported at all.
+    """
+    P0 = len(plans)
+    k = plans[0].k
+    early_exit = (not complete) and metric in _EARLY_EXIT_METRICS
+
+    taus_np = np.asarray(taus, np.int64)
+    # device-side τ guard: freeze mis counters at τ unless complete
+    dev_tau_full = np.full(P0, _INT32_MAX if complete else 0, np.int32)
+    if not complete:
+        dev_tau_full[:] = np.minimum(taus_np, _INT32_MAX)
+
+    supports = np.zeros(P0, np.int64)
+    found = np.zeros(P0, np.int64)
+    ovf = np.zeros(P0, bool)
+    blocks_run = np.zeros(P0, np.int64)
+
+    step = _step_fn(metric, k, cfg)
+
+    def bucket_taus(bucket_map: np.ndarray) -> jnp.ndarray:
+        safe = np.where(bucket_map >= 0, bucket_map, 0)
+        return jnp.asarray(
+            np.where(bucket_map >= 0, dev_tau_full[safe], 0), jnp.int32)
+
+    # current bucket: stacked plans + state + map to group indices (-1 = pad)
+    P_pad = _bucket_size(P0)
+    bucket_map = np.concatenate([np.arange(P0), np.full(P_pad - P0, -1)])
+    plans_cur = _gather_rows(stack_plans(plans),
+                             np.where(bucket_map >= 0, bucket_map, 0))
+    state = _state_init(metric, P_pad, k, n)
+    taus_dev = bucket_taus(bucket_map)
+
+    timed_out = False
+    unfinished: set = set()
+    n_blocks = -(-n // cfg.root_block)
+    for b in range(n_blocks):
+        if deadline is not None and time.monotonic() > deadline:
+            timed_out = True
+            unfinished = {int(i) for i in bucket_map[bucket_map >= 0]}
+            break
+        state, values, blk_found, blk_ovf = step(
+            dev_g, plans_cur, jnp.int32(b * cfg.root_block), state, taus_dev)
+        values_np = np.asarray(values)
+        found_np = np.asarray(blk_found)
+        ovf_np = np.asarray(blk_ovf)
+
+        live = bucket_map >= 0
+        gi = bucket_map[live]
+        found[gi] += found_np[live].astype(np.int64)
+        ovf[gi] |= ovf_np[live]
+        blocks_run[gi] += 1
+        if metric == "frac":
+            supports[gi] = np.floor(values_np[live].astype(np.float64)).astype(np.int64)
+        else:
+            supports[gi] = values_np[live].astype(np.int64)
+
+        if not early_exit:
+            continue
+        still = gi[supports[gi] < taus_np[gi]]
+        if still.size == 0:
+            break
+        if still.size <= bucket_map.size // 2 and b + 1 < n_blocks:
+            # shrink: re-stack survivors into the next power-of-two bucket
+            pos_of = {g_idx: i for i, g_idx in enumerate(bucket_map)}
+            pos = np.array([pos_of[g_idx] for g_idx in still])
+            pad = _bucket_size(still.size) - still.size
+            sel = np.concatenate([pos, np.full(pad, pos[0])]).astype(np.int64)
+            plans_cur = _gather_rows(plans_cur, sel)
+            state = _gather_rows(state, sel)
+            bucket_map = np.concatenate([still, np.full(pad, -1)])
+            taus_dev = bucket_taus(bucket_map)
+        elif still.size < gi.size:
+            # same bucket; just stop accounting for the finished patterns
+            bucket_map = np.where(np.isin(bucket_map, still), bucket_map, -1)
+
+    outcomes: List[Optional[PatternOutcome]] = [
+        None if i in unfinished else PatternOutcome(
+            support=int(supports[i]),
+            frequent=bool(supports[i] >= taus_np[i]),
+            embeddings_found=int(found[i]),
+            overflowed=bool(ovf[i]),
+            blocks_run=int(blocks_run[i]),
+        )
+        for i in range(P0)
+    ]
+    return outcomes, timed_out
+
+
+def evaluate_level_batched(
+    host_g: DataGraph,
+    dev_g: DeviceGraph,
+    patterns: Sequence[Pattern],
+    taus: Sequence[int],
+    metric: str,
+    cfg: MatchConfig,
+    *,
+    complete: bool = False,
+    deadline: Optional[float] = None,
+    max_batch: int = DEFAULT_MAX_BATCH,
+) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
+    """Evaluate a whole candidate level with the batched data plane.
+
+    Candidates may mix pattern sizes (edge-extension generation); they are
+    grouped by k — and each group split into ≤ ``max_batch`` slices to bound
+    transient device memory — with each slice running as one vmapped
+    program.  Returns (outcomes aligned with the input — ``None`` for
+    candidates not reached before a timeout —, timed_out,
+    peak_device_state_bytes).
+    """
+    assert len(patterns) == len(taus)
+    assert metric in _BATCHABLE_METRICS, metric
+    assert max_batch >= 1
+    outcomes: List[Optional[PatternOutcome]] = [None] * len(patterns)
+    groups: dict = {}
+    for i, p in enumerate(patterns):
+        groups.setdefault(p.k, []).append(i)
+
+    timed_out = False
+    peak_state_bytes = 0
+    for k in sorted(groups):
+        for lo in range(0, len(groups[k]), max_batch):
+            idxs = groups[k][lo:lo + max_batch]
+            plans = [make_plan(patterns[i], host_g) for i in idxs]
+            group_taus = [taus[i] for i in idxs]
+            peak_state_bytes = max(
+                peak_state_bytes,
+                _bucket_size(len(idxs))
+                * (_state_bytes(metric, k, host_g.n)
+                   + transient_match_bytes(cfg, k)))
+            got, group_timed_out = _mine_group(
+                dev_g, plans, group_taus, metric, cfg,
+                complete=complete, n=host_g.n, deadline=deadline)
+            for i, out in zip(idxs, got):
+                outcomes[i] = out
+            if group_timed_out:
+                timed_out = True
+                break
+        if timed_out:
+            break
+    assert timed_out or all(o is not None for o in outcomes)
+    return outcomes, timed_out, peak_state_bytes
+
+
+# ---------------------------------------------------------------------------
+# legacy convenience API (kept for callers/tests of the original sketch)
+# ---------------------------------------------------------------------------
 
 def batched_mis_supports(
     host_g: DataGraph,
@@ -70,28 +383,11 @@ def batched_mis_supports(
 ) -> BatchedResult:
     """mIS supports for a whole same-k candidate level in batched steps."""
     assert len(patterns) == len(taus) and len(patterns) > 0
-    k = patterns[0].k
-    assert all(p.k == k for p in patterns)
-    P = len(patterns)
     dev_g = DeviceGraph.from_host(host_g)
-    plans = stack_plans([make_plan(p, host_g) for p in patterns])
-    n = host_g.n
-
-    bitmaps = jnp.zeros((P, (n + 31) // 32), jnp.uint32)
-    counts = jnp.zeros((P,), jnp.int32)
-    tau_arr = jnp.asarray(
-        [np.iinfo(np.int32).max if complete else t for t in taus], jnp.int32)
-    found = np.zeros(P, np.int64)
-    ovf = np.zeros(P, bool)
-
-    step = jax.jit(_batched_block, static_argnames=("k", "cfg"))
-    for b in range(0, n, cfg.root_block):
-        bitmaps, counts, blk_found, blk_ovf = step(
-            dev_g, plans, jnp.int32(b), bitmaps, counts, tau_arr, k=k,
-            cfg=cfg)
-        found += np.asarray(blk_found, np.int64)
-        ovf |= np.asarray(blk_ovf)
-        if not complete and bool((np.asarray(counts) >= np.asarray(taus)).all()):
-            break
-    return BatchedResult(supports=np.asarray(counts), found=found,
-                         overflowed=ovf)
+    outcomes, _, _ = evaluate_level_batched(
+        host_g, dev_g, patterns, taus, "mis", cfg, complete=complete)
+    return BatchedResult(
+        supports=np.asarray([o.support for o in outcomes]),
+        found=np.asarray([o.embeddings_found for o in outcomes], np.int64),
+        overflowed=np.asarray([o.overflowed for o in outcomes], bool),
+    )

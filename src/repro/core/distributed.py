@@ -24,30 +24,29 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import jax_compat
+
 from .graph import DataGraph, DeviceGraph
 from .pattern import Pattern
-from .plan import PatternPlan, make_plan
+from .plan import PatternPlan, make_plan, stack_plans
 from .matcher import MatchConfig, match_block
 from . import mis as mis_lib
 
-__all__ = ["mining_mesh", "sharded_mis_step", "distributed_support"]
+__all__ = ["mining_mesh", "sharded_mis_step", "distributed_support",
+           "sharded_batched_mis_step", "distributed_batched_supports"]
 
 
 def mining_mesh(axis: str = "workers", devices=None) -> Mesh:
     """A 1-D mesh over all available devices (mining shards roots, period)."""
     devices = np.array(jax.devices() if devices is None else devices)
-    return jax.make_mesh(
-        (devices.size,), (axis,),
-        axis_types=(jax.sharding.AxisType.Auto,),
-        devices=devices,
-    )
+    return jax_compat.make_mesh((devices.size,), (axis,), devices=devices)
 
 
 def _luby_rounds_global(bitmap, count, emb, n_valid, tau, k: int, n: int,
@@ -56,7 +55,7 @@ def _luby_rounds_global(bitmap, count, emb, n_valid, tau, k: int, n: int,
 
     bitmap/count are replicated; emb/n_valid are per-device locals.
     """
-    ndev = jax.lax.axis_size(axis)
+    ndev = jax_compat.axis_size(axis)
     didx = jax.lax.axis_index(axis).astype(jnp.int32)
     rowid = jnp.arange(cap, dtype=jnp.int32)
     gprio_base = didx * cap
@@ -119,13 +118,102 @@ def sharded_mis_step(g: DeviceGraph, plan: PatternPlan, block_starts,
                                       cfg.cap, axis)
         return bm, cnt, jax.lax.psum(found, axis)
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axis), P(), P()),
         out_specs=(P(), P(), P()),
         check_vma=False,
     )(block_starts, bitmap, count)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "k", "n", "axis", "mesh"))
+def sharded_batched_mis_step(g: DeviceGraph, plans: PatternPlan, block_starts,
+                             bitmaps, counts, taus, *, cfg: MatchConfig,
+                             k: int, n: int, axis: str, mesh: Mesh):
+    """One distributed step for a whole same-k candidate batch.
+
+    The batched data plane's pattern axis composes with root sharding: roots
+    are split across the mesh (``block_starts``: one origin per device) while
+    the stacked plans and the (P, …) metric state are replicated and vmapped
+    on every device — the pattern axis is pure extra parallelism, the root
+    axis is where the collectives run.  Per-pattern results are identical to
+    `sharded_mis_step` run pattern-by-pattern (globally-unique priorities are
+    per pattern; patterns never interact).
+
+    plans/bitmaps/counts/taus: leading (P,) pattern axis, replicated.
+    block_starts: (ndev,) int32 — one root-block origin per device.
+    Returns (bitmaps, counts, found) with found summed over the mesh, (P,).
+    """
+
+    def step(block_start, bms, cnts):
+        def one(plan, bm, cnt, tau):
+            emb, n_valid, found, _ = match_block(g, plan, block_start[0], cfg)
+            bm, cnt = _luby_rounds_global(bm, cnt, emb, n_valid, tau, k, n,
+                                          cfg.cap, axis)
+            return bm, cnt, found
+
+        bms, cnts, found = jax.vmap(one)(plans, bms, cnts, taus)
+        return bms, cnts, jax.lax.psum(found, axis)
+
+    return jax_compat.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(axis), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )(block_starts, bitmaps, counts)
+
+
+def distributed_batched_supports(
+    host_g: DataGraph,
+    patterns: Sequence[Pattern],
+    taus: Sequence[int],
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "workers",
+    match_cfg: Optional[MatchConfig] = None,
+    complete: bool = False,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """mIS supports of a same-k candidate batch, mined across the whole mesh.
+
+    Returns (supports, found), each (P,).  Per-pattern semantics match
+    `distributed_support`; the host early-exits the super-block loop once
+    every pattern has reached its τ (each pattern's ``count < τ`` guard
+    freezes its own state as soon as it individually finishes).
+    """
+    assert len(patterns) == len(taus) and len(patterns) > 0
+    k = patterns[0].k
+    assert all(p.k == k for p in patterns), "batch must share pattern size"
+    mesh = mesh or mining_mesh(axis)
+    ndev = int(np.prod(list(mesh.shape.values())))
+    cfg = match_cfg or MatchConfig.for_graph(host_g)
+    dev_g = DeviceGraph.from_host(host_g)
+    plans = stack_plans([make_plan(p, host_g) for p in patterns])
+    n = host_g.n
+    P_ = len(patterns)
+    taus_np = np.asarray(taus, np.int64)
+
+    bitmaps = jnp.zeros((P_, mis_lib.bitmap_words(n)), jnp.uint32)
+    counts = jnp.zeros((P_,), jnp.int32)
+    int32_max = np.iinfo(np.int32).max
+    tau_full = np.full(P_, int32_max, np.int64) if complete else taus_np
+    tau_dev = jnp.asarray(np.minimum(tau_full, int32_max), jnp.int32)
+    found_total = np.zeros(P_, np.int64)
+
+    stride = ndev * cfg.root_block
+    n_super = -(-n // stride)
+    for s in range(n_super):
+        starts = jnp.asarray(
+            s * stride + np.arange(ndev) * cfg.root_block, jnp.int32)
+        bitmaps, counts, found = sharded_batched_mis_step(
+            dev_g, plans, starts, bitmaps, counts, tau_dev,
+            cfg=cfg, k=k, n=n, axis=axis, mesh=mesh)
+        found_total += np.asarray(found, np.int64)
+        if not complete and bool((np.asarray(counts) >= taus_np).all()):
+            break
+    return np.asarray(counts, np.int64), found_total
 
 
 def distributed_support(

@@ -1,8 +1,11 @@
 """FLEXIS — Algorithm 1: the level-wise mining loop.
 
 Host control plane: candidate generation (Alg 2–4), τ computation (Eq. 1),
-early termination, timeout.  Device data plane: `match_block` frontier
-expansion + metric updates, one jit per pattern size.
+early termination, timeout.  Device data plane: by default the *batched*
+executor (`core/batched.py`) — every same-k candidate group of a level runs
+as one vmapped jit program with per-pattern τ masking — with the paper's
+one-pattern-at-a-time loop retained as the ``execution="sequential"``
+oracle (`evaluate_pattern`, one jit per pattern size).
 """
 from __future__ import annotations
 
@@ -18,8 +21,9 @@ from .graph import DataGraph, DeviceGraph
 from .pattern import Pattern
 from .canonical import canonical_key, dedupe_patterns
 from .generation import edge_extension_candidates, generate_new_patterns
-from .matcher import MatchConfig, match_block
+from .matcher import MatchConfig, match_block, transient_match_bytes
 from .plan import make_plan
+from . import batched as batched_lib
 from . import mis as mis_lib
 from . import metrics as metrics_lib
 
@@ -28,6 +32,7 @@ __all__ = ["MiningConfig", "PatternStats", "MiningResult", "tau_threshold", "min
 
 _METRICS = ("mis", "mis_luby", "mni", "frac", "mis_exact")
 _GENERATION = ("merge", "edge_ext")
+_EXECUTION = ("batched", "sequential")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,12 +45,24 @@ class MiningConfig:
     complete: bool = False         # disable τ early exit (exact metric values)
     time_limit_s: Optional[float] = None
     match: MatchConfig = dataclasses.field(default_factory=MatchConfig)
+    # data plane: "batched" stacks each same-k candidate group of a level
+    # into one vmapped device program; "sequential" is the paper's
+    # one-pattern-at-a-time loop, kept as the equivalence oracle.
+    # (mis_exact always takes the sequential path — its MIS solve is host-side.)
+    execution: str = "batched"
+    # ceiling on the pattern axis of one batched program (transient device
+    # memory is O(batch · cap · chunk); bigger levels are sliced)
+    batch_patterns: int = 64
 
     def __post_init__(self):
         if self.metric not in _METRICS:
             raise ValueError(f"metric must be one of {_METRICS}")
         if self.generation not in _GENERATION:
             raise ValueError(f"generation must be one of {_GENERATION}")
+        if self.execution not in _EXECUTION:
+            raise ValueError(f"execution must be one of {_EXECUTION}")
+        if self.batch_patterns < 1:
+            raise ValueError("batch_patterns must be >= 1")
         if not (0.0 <= self.lam <= 1.0):
             raise ValueError("lambda (slider) must be in [0, 1]")
 
@@ -178,8 +195,7 @@ def evaluate_pattern(
 
 def _device_bytes(cfg: MiningConfig, k: int, n: int) -> int:
     mcfg = cfg.match
-    emb = mcfg.cap * k * 4
-    graphless = emb * 2 + mcfg.cap * mcfg.chunk * (k + 8) * 4
+    graphless = transient_match_bytes(mcfg, k)
     if cfg.metric in ("mis", "mis_luby"):
         graphless += ((n + 31) // 32) * 4 + (n * 4 if cfg.metric == "mis_luby" else 0)
     elif cfg.metric == "mni":
@@ -207,15 +223,17 @@ def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
     mis_mode = cfg.metric in ("mis", "mis_luby", "mis_exact")
     level = 0
 
+    use_batched = cfg.execution == "batched" and cfg.metric != "mis_exact"
+    deadline = None if cfg.time_limit_s is None else t0 + cfg.time_limit_s
+
     while cp:
         level += 1
         level_frequent: List[Pattern] = []
         lvl_searched = 0
         lvl_pruned = 0
+        eval_pats: List[Pattern] = []
+        eval_taus: List[int] = []
         for pat in cp:
-            if cfg.time_limit_s is not None and time.monotonic() - t0 > cfg.time_limit_s:
-                timed_out = True
-                break
             tau = (
                 tau_threshold(cfg.sigma, cfg.lam, pat.k) if mis_mode else cfg.sigma
             )
@@ -224,14 +242,47 @@ def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
             if mis_mode and pat.k * tau > g.n:
                 lvl_pruned += 1
                 continue
-            st = evaluate_pattern(g, dev_g, pat, tau, cfg)
-            searched += 1
-            lvl_searched += 1
-            all_stats.append(st)
-            peak_bytes = max(peak_bytes, graph_bytes + _device_bytes(cfg, pat.k, g.n))
-            if st.frequent:
-                frequent.append((pat, st.support))
-                level_frequent.append(pat)
+            eval_pats.append(pat)
+            eval_taus.append(tau)
+
+        if use_batched and eval_pats:
+            outcomes, lvl_timed_out, state_bytes = batched_lib.evaluate_level_batched(
+                g, dev_g, eval_pats, eval_taus, cfg.metric, cfg.match,
+                complete=cfg.complete, deadline=deadline,
+                max_batch=cfg.batch_patterns)
+            timed_out |= lvl_timed_out
+            peak_bytes = max(peak_bytes, graph_bytes + state_bytes)
+            for pat, tau, out in zip(eval_pats, eval_taus, outcomes):
+                if out is None:  # level timed out before this group ran
+                    continue
+                st = PatternStats(
+                    pattern=pat,
+                    support=out.support,
+                    tau=tau,
+                    frequent=out.frequent,
+                    embeddings_found=out.embeddings_found,
+                    overflowed=out.overflowed,
+                    blocks_run=out.blocks_run,
+                )
+                searched += 1
+                lvl_searched += 1
+                all_stats.append(st)
+                if st.frequent:
+                    frequent.append((pat, st.support))
+                    level_frequent.append(pat)
+        else:
+            for pat, tau in zip(eval_pats, eval_taus):
+                if deadline is not None and time.monotonic() > deadline:
+                    timed_out = True
+                    break
+                st = evaluate_pattern(g, dev_g, pat, tau, cfg)
+                searched += 1
+                lvl_searched += 1
+                all_stats.append(st)
+                peak_bytes = max(peak_bytes, graph_bytes + _device_bytes(cfg, pat.k, g.n))
+                if st.frequent:
+                    frequent.append((pat, st.support))
+                    level_frequent.append(pat)
         per_level[level] = {
             "candidates": len(cp),
             "searched": lvl_searched,

@@ -102,13 +102,19 @@ class DeviceGraph:
     def from_host(cls, g: DataGraph) -> "DeviceGraph":
         if g.n_edges > np.iinfo(np.int32).max:
             raise ValueError("graphs beyond int32 edge counts must be sharded first")
+        out_indices, in_indices = g.out_indices, g.in_indices
+        if g.n_edges == 0:
+            # edgeless graph: keep index arrays non-empty so the matcher's
+            # gathers stay well-formed; the sentinel is unreachable because
+            # every degree is 0 (indptr is all zeros).
+            out_indices = in_indices = np.zeros(1, np.int32)
         return cls(
             n=g.n,
             labels=jnp.asarray(g.labels, jnp.int32),
             out_indptr=jnp.asarray(g.out_indptr, jnp.int32),
-            out_indices=jnp.asarray(g.out_indices, jnp.int32),
+            out_indices=jnp.asarray(out_indices, jnp.int32),
             in_indptr=jnp.asarray(g.in_indptr, jnp.int32),
-            in_indices=jnp.asarray(g.in_indices, jnp.int32),
+            in_indices=jnp.asarray(in_indices, jnp.int32),
         )
 
 

@@ -16,7 +16,11 @@ Everything is static-shaped; overflow beyond ``cap`` is *counted* and
 surfaced, never silently dropped.  The host drives root *blocks* through
 ``match_block`` and owns early termination (τ reached) — device code is one
 jit-compiled function per pattern size k, reused across all patterns of that
-size (plans are data, not static arguments).
+size (plans are data, not static arguments).  Because plans are data,
+``match_block`` is also ``vmap``-able over a leading pattern axis — the
+batched data plane (``core/batched.py``) runs a whole same-k candidate
+level as one program, and ``core/distributed.py`` composes that axis with
+root sharding under ``shard_map``.
 """
 from __future__ import annotations
 
@@ -31,7 +35,8 @@ import numpy as np
 from .graph import DataGraph, DeviceGraph
 from .plan import PatternPlan
 
-__all__ = ["MatchConfig", "match_block", "edge_exists", "device_graph_tuple"]
+__all__ = ["MatchConfig", "match_block", "edge_exists", "device_graph_tuple",
+           "transient_match_bytes"]
 
 
 # Register the graph/plan dataclasses as pytrees so they pass through jit
@@ -109,6 +114,14 @@ class MatchConfig:
             # label-rich and label-poor graphs (EXPERIMENTS.md §Perf cell 3)
             two_phase=True,
         )
+
+
+def transient_match_bytes(cfg: MatchConfig, k: int) -> int:
+    """Per-pattern transient device footprint of one match step (telemetry):
+    two frontier tables plus the candidate-expansion grid.  Shared by the
+    sequential and batched planes so their peak_device_bytes agree."""
+    emb = cfg.cap * k * 4
+    return emb * 2 + cfg.cap * cfg.chunk * (k + 8) * 4
 
 
 def edge_exists(indptr, indices, u, v, n_iters: int):

@@ -4,6 +4,12 @@ The device-side updates consume the matcher's embedding blocks; the exact
 MIS (NP-hard, gold standard) runs on the host over the materialized conflict
 graph and is used by tests/benchmarks only — precisely how the paper treats
 it (§2.4: accurate but too expensive for production).
+
+Contract for the batched data plane (``core/batched.py``): every update
+here is pure dataflow over its state array, so it ``vmap``s over a leading
+pattern axis — (P, k, n) image/count tables — with per-pattern results
+identical to P independent sequential updates.  Keep new metrics free of
+host-side control flow for this to hold.
 """
 from __future__ import annotations
 

@@ -19,15 +19,16 @@ of that size — crucial when a mining level evaluates hundreds of candidates.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .graph import DataGraph
 from .pattern import Pattern
 
-__all__ = ["PatternPlan", "make_plan"]
+__all__ = ["PatternPlan", "make_plan", "stack_plans"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,22 @@ class PatternPlan:
     check_out: jnp.ndarray
     check_in: jnp.ndarray
     order: tuple  # host-side: order[i] = original pattern vertex at step i
+
+
+def stack_plans(plans: Sequence[PatternPlan]) -> PatternPlan:
+    """Stack same-k plans into one plan pytree with a leading pattern axis.
+
+    The per-plan host-side ``order`` metadata is dropped (set to ``()``) so
+    every stacked plan of a given k shares one treedef — jit programs keyed on
+    the plan pytree then cache-hit across levels instead of retracing per
+    stack.
+    """
+    assert len(plans) > 0, "cannot stack zero plans"
+    k = plans[0].k
+    assert all(p.k == k for p in plans), "plans must share pattern size"
+    leaves = [jax.tree_util.tree_flatten(p)[0] for p in plans]
+    stacked = [jnp.stack([ln[i] for ln in leaves]) for i in range(len(leaves[0]))]
+    return PatternPlan(k, *stacked, order=())
 
 
 def make_plan(pat: Pattern, graph: Optional[DataGraph] = None) -> PatternPlan:

@@ -1,0 +1,80 @@
+"""Version tolerance for the jax APIs this repo uses.
+
+The code targets current jax (explicit-sharding era: ``jax.sharding.AxisType``,
+``jax.shard_map`` with ``check_vma``), but frozen containers may carry an older
+release where those names live elsewhere or don't exist.  Everything that
+depends on a moved/renamed symbol goes through this module so the rest of the
+codebase can stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+def _accepts_kwarg(fn, name: str) -> bool:
+    try:
+        return name in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+__all__ = ["auto_axis_types", "axis_size", "make_mesh", "make_raw_mesh",
+           "shard_map"]
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size, or the psum(1) idiom where it doesn't exist yet."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def auto_axis_types(n_axes: int) -> Optional[tuple]:
+    """(AxisType.Auto,) * n on modern jax; None where AxisType predates."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n_axes
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None) -> Mesh:
+    """jax.make_mesh with Auto axis types where the API supports them."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_types = auto_axis_types(len(tuple(axis_names)))
+    if axis_types is not None and _accepts_kwarg(jax.make_mesh, "axis_types"):
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def make_raw_mesh(devices, axis_names: Sequence[str]) -> Mesh:
+    """jax.sharding.Mesh from an explicit device array, version-tolerant."""
+    axis_types = auto_axis_types(len(tuple(axis_names)))
+    if axis_types is not None and _accepts_kwarg(Mesh.__init__, "axis_types"):
+        return Mesh(devices, tuple(axis_names), axis_types=axis_types)
+    return Mesh(devices, tuple(axis_names))
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map / jax.experimental.shard_map across jax versions.
+
+    ``check_vma`` maps onto the old ``check_rep`` (same semantics: verify
+    per-output replication/varying-axis annotations).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if _accepts_kwarg(_shard_map, "check_rep"):
+        kw = {"check_rep": check_vma}
+    elif _accepts_kwarg(_shard_map, "check_vma"):
+        kw = {"check_vma": check_vma}
+    else:
+        kw = {}
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -32,6 +32,11 @@ def main(argv=None) -> int:
                     choices=["mis", "mis_luby", "mni", "frac"])
     ap.add_argument("--generation", default="merge",
                     choices=["merge", "edge_ext"])
+    ap.add_argument("--execution", default="batched",
+                    choices=["batched", "sequential"],
+                    help="data plane: one vmapped program per same-k "
+                         "candidate group (batched, default) or the paper's "
+                         "per-pattern loop (sequential oracle)")
     ap.add_argument("--max-size", type=int, default=4)
     ap.add_argument("--time-limit", type=float, default=1800.0,
                     help="paper uses a 30-minute timeout")
@@ -48,7 +53,7 @@ def main(argv=None) -> int:
     cfg = MiningConfig(
         sigma=args.sigma, lam=args.lam, metric=args.metric,
         generation=args.generation, max_pattern_size=args.max_size,
-        time_limit_s=args.time_limit,
+        time_limit_s=args.time_limit, execution=args.execution,
         match=MatchConfig.for_graph(g, cap=args.cap),
     )
     res = mine(g, cfg)
@@ -71,7 +76,7 @@ def main(argv=None) -> int:
         out = {
             "dataset": args.dataset, "scale": args.scale,
             "sigma": args.sigma, "lam": args.lam, "metric": args.metric,
-            "generation": args.generation,
+            "generation": args.generation, "execution": args.execution,
             "elapsed_s": res.elapsed_s, "timed_out": res.timed_out,
             "n_frequent": len(res.frequent), "searched": res.searched,
             "peak_device_bytes": res.peak_device_bytes,

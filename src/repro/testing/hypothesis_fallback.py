@@ -1,0 +1,258 @@
+"""Drop-in mini implementation of the ``hypothesis`` API the test-suite uses.
+
+The dev environment may not ship ``hypothesis`` (the container image is
+intentionally frozen); rather than letting the whole suite die at collection,
+``tests/conftest.py`` calls :func:`install` to register this module under the
+``hypothesis`` name when the real library is absent.  CI installs the real
+hypothesis from ``requirements-dev.txt``, so the fallback only runs where the
+real thing cannot.
+
+Scope (exactly the surface our tests consume):
+
+  * ``given(*strategies)`` — draws each strategy per example and calls the
+    test; deterministic per-test seed, failures re-raise with the example
+    appended to the assertion context.
+  * ``settings(max_examples=, deadline=, suppress_health_check=)`` decorator.
+  * ``assume(cond)`` — aborts the current example without failing.
+  * ``HealthCheck`` — attribute stand-ins.
+  * ``strategies``: ``integers``, ``booleans``, ``lists``, ``sampled_from``,
+    ``composite`` (with ``draw``).
+
+No shrinking, no example database — a failing example prints its values so it
+can be frozen into a regression test by hand.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+__all__ = [
+    "given", "settings", "assume", "HealthCheck", "strategies", "install",
+    "UnsatisfiedAssumption",
+]
+
+# Real hypothesis defaults to 100; the fallback trades coverage for wall time
+# on the frozen container. Override with REPRO_HYPOTHESIS_MAX_EXAMPLES.
+_DEFAULT_MAX_EXAMPLES = int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES", 25))
+_MAX_ASSUME_RETRIES = 50
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Names accepted by settings(suppress_health_check=[...]); inert here."""
+
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+    large_base_example = "large_base_example"
+
+
+class SearchStrategy:
+    def do_draw(self, rnd: random.Random):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self._base, self._fn = base, fn
+
+    def do_draw(self, rnd):
+        return self._fn(self._base.do_draw(rnd))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self._base, self._pred = base, pred
+
+    def do_draw(self, rnd):
+        for _ in range(_MAX_ASSUME_RETRIES):
+            v = self._base.do_draw(rnd)
+            if self._pred(v):
+                return v
+        raise UnsatisfiedAssumption()
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self._lo, self._hi = int(min_value), int(max_value)
+
+    def do_draw(self, rnd):
+        # bias toward the endpoints now and then, like hypothesis does
+        r = rnd.random()
+        if r < 0.05:
+            return self._lo
+        if r < 0.1:
+            return self._hi
+        return rnd.randint(self._lo, self._hi)
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rnd):
+        return rnd.random() < 0.5
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self._elements = elements
+        self._min = int(min_size)
+        self._max = int(max_size if max_size is not None else min_size + 10)
+
+    def do_draw(self, rnd):
+        size = rnd.randint(self._min, self._max)
+        return [self._elements.do_draw(rnd) for _ in range(size)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options):
+        self._options = list(options)
+
+    def do_draw(self, rnd):
+        return rnd.choice(self._options)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self._fn, self._args, self._kwargs = fn, args, kwargs
+
+    def do_draw(self, rnd):
+        def draw(strategy):
+            return strategy.do_draw(rnd)
+
+        return self._fn(draw, *self._args, **self._kwargs)
+
+
+def integers(min_value, max_value) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def lists(elements, *, min_size=0, max_size=None) -> SearchStrategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def sampled_from(options) -> SearchStrategy:
+    return _SampledFrom(options)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return builder
+
+
+def settings(max_examples=None, deadline=None, suppress_health_check=(),
+             **_ignored):
+    """Decorator; only max_examples is meaningful in the fallback."""
+
+    def deco(test):
+        if max_examples is not None:
+            test._fallback_max_examples = int(max_examples)
+        return test
+
+    return deco
+
+
+def given(*strategies_args, **strategies_kw):
+    def deco(test):
+        sig = inspect.signature(test)
+        params = list(sig.parameters.values())
+        # given fills the rightmost positional params (hypothesis semantics);
+        # whatever remains on the left stays visible to pytest as fixtures.
+        n_pos = len(strategies_args)
+        kept = params[: len(params) - n_pos]
+        kept = [p for p in kept if p.name not in strategies_kw]
+        # drawn values are passed by name so pytest-provided params
+        # (parametrize/fixtures, delivered as kwargs) never collide
+        drawn_names = [p.name for p in params[len(params) - n_pos:]]
+
+        @functools.wraps(test)
+        def wrapper(*fixture_args, **fixture_kw):
+            max_examples = getattr(
+                wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(
+                f"{test.__module__}.{test.__qualname__}".encode())
+            rnd = random.Random(seed)
+            ran = 0
+            for example_idx in range(max_examples):
+                for _attempt in range(_MAX_ASSUME_RETRIES):
+                    try:
+                        drawn = [s.do_draw(rnd) for s in strategies_args]
+                        drawn_kw = {name: s.do_draw(rnd)
+                                    for name, s in strategies_kw.items()}
+                    except UnsatisfiedAssumption:
+                        continue
+                    try:
+                        test(*fixture_args,
+                             **{**fixture_kw, **drawn_kw,
+                                **dict(zip(drawn_names, drawn))})
+                        ran += 1
+                        break
+                    except UnsatisfiedAssumption:
+                        continue
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (#{example_idx}, seed "
+                            f"{seed}): args={drawn!r} kwargs={drawn_kw!r}"
+                        ) from e
+            if ran == 0:
+                raise UnsatisfiedAssumption(
+                    f"{test.__qualname__}: no example satisfied assume() in "
+                    f"{max_examples} tries")
+
+        # hide the given-supplied params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.__dict__.pop("__wrapped__", None)
+        if hasattr(test, "_fallback_max_examples"):
+            wrapper._fallback_max_examples = test._fallback_max_examples
+        return wrapper
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.UnsatisfiedAssumption = UnsatisfiedAssumption
+    hyp.__fallback__ = this
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "lists", "sampled_from", "composite",
+                 "SearchStrategy"):
+        setattr(st_mod, name, getattr(this, name))
+    hyp.strategies = st_mod
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    return hyp

@@ -1,6 +1,13 @@
 """Shared fixtures/strategies. NOTE: no XLA_FLAGS here — tests see 1 device."""
 import numpy as np
 import pytest
+
+try:  # real hypothesis when installed (CI); frozen containers use the shim
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()
 from hypothesis import strategies as st
 
 from repro.core import Pattern, build_graph

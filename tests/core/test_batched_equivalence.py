@@ -1,0 +1,132 @@
+"""Batched data plane ≡ sequential oracle, per pattern, for every metric.
+
+The contract (core/batched.py): with ``execution="batched"`` every candidate
+sees the exact same (block, metric-update) history as the sequential loop, so
+(support, frequent, overflowed) — and even embeddings_found/blocks_run — are
+bit-identical per pattern, early exit included.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, HealthCheck
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.core.batched import (
+    clear_program_cache, evaluate_level_batched, program_cache_stats,
+)
+from repro.core.flexis import evaluate_pattern, initial_candidates, tau_threshold
+from repro.core.graph import DeviceGraph
+from repro.data.synthetic import rmat_graph
+from tests.conftest import data_graphs
+
+METRICS = ("mis", "mis_luby", "mni")
+
+
+def _cfg(g, metric, execution, **kw):
+    kw.setdefault("match", MatchConfig.for_graph(g, cap=2048, root_block=32, chunk=4))
+    kw.setdefault("sigma", 2)
+    kw.setdefault("lam", 1.0)
+    kw.setdefault("max_pattern_size", 3)
+    return MiningConfig(metric=metric, execution=execution, **kw)
+
+
+def _stat_triples(res):
+    return [(s.support, s.frequent, s.overflowed) for s in res.stats]
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(min_n=6, max_n=16, n_labels=2))
+def test_mine_batched_equals_sequential(metric, g):
+    seq = mine(g, _cfg(g, metric, "sequential"))
+    bat = mine(g, _cfg(g, metric, "batched"))
+    assert _stat_triples(seq) == _stat_triples(bat)
+    assert seq.searched == bat.searched
+    assert seq.per_level == bat.per_level
+    assert [(p.key(), s) for p, s in seq.frequent] == \
+           [(p.key(), s) for p, s in bat.frequent]
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data_graphs(min_n=8, max_n=14, n_labels=2, p_edge_denom=3))
+def test_mixed_k_levels_edge_ext(metric, g):
+    """edge-extension levels mix pattern sizes — the batched plane groups by
+    k and must still reproduce the sequential stats order."""
+    seq = mine(g, _cfg(g, metric, "sequential", generation="edge_ext"))
+    bat = mine(g, _cfg(g, metric, "batched", generation="edge_ext"))
+    assert _stat_triples(seq) == _stat_triples(bat)
+    assert seq.searched == bat.searched
+
+
+@pytest.mark.parametrize("metric", METRICS + ("frac",))
+@pytest.mark.parametrize("complete", (False, True))
+def test_level_equivalence_exact_fields(metric, complete):
+    """Field-for-field check on a fixed level, early exit and complete."""
+    g = rmat_graph(300, 2000, n_labels=3, seed=4, undirected=True)
+    dg = DeviceGraph.from_host(g)
+    cfg = MatchConfig.for_graph(g, cap=2048, root_block=128)
+    cands = initial_candidates(g)[:12]
+    taus = [tau_threshold(5, 1.0, p.k) for p in cands]
+    mcfg = MiningConfig(sigma=5, lam=1.0, metric=metric, complete=complete,
+                        match=cfg, execution="sequential")
+    base = [evaluate_pattern(g, dg, p, t, mcfg) for p, t in zip(cands, taus)]
+    outs, timed_out, _ = evaluate_level_batched(
+        g, dg, cands, taus, metric, cfg, complete=complete)
+    assert not timed_out
+    for b, o in zip(base, outs):
+        assert (b.support, b.frequent, b.overflowed) == \
+               (o.support, o.frequent, o.overflowed)
+        assert b.embeddings_found == o.embeddings_found
+        assert b.blocks_run == o.blocks_run
+
+
+@pytest.mark.parametrize("max_batch", (1, 3, 5))
+def test_batch_slicing_preserves_equivalence(max_batch):
+    """Levels bigger than batch_patterns are sliced; results must not move."""
+    g = rmat_graph(300, 2000, n_labels=3, seed=4, undirected=True)
+    dg = DeviceGraph.from_host(g)
+    cfg = MatchConfig.for_graph(g, cap=2048, root_block=128)
+    cands = initial_candidates(g)[:12]
+    taus = [tau_threshold(5, 1.0, p.k) for p in cands]
+    ref, _, _ = evaluate_level_batched(g, dg, cands, taus, "mis", cfg)
+    got, _, _ = evaluate_level_batched(g, dg, cands, taus, "mis", cfg,
+                                       max_batch=max_batch)
+    assert [(o.support, o.frequent, o.overflowed) for o in ref] == \
+           [(o.support, o.frequent, o.overflowed) for o in got]
+
+
+def test_program_cache_reuses_executables():
+    """Levels (and repeat runs) must hit the step-program cache, not retrace."""
+    g = rmat_graph(200, 1200, n_labels=2, seed=7, undirected=True)
+    cfg = _cfg(g, "mis", "batched", sigma=3)
+    clear_program_cache()
+    mine(g, cfg)
+    first = program_cache_stats()
+    mine(g, cfg)
+    second = program_cache_stats()
+    assert second.misses == first.misses  # no new traces on a repeat run
+    assert second.hits > first.hits
+
+
+def test_mis_exact_falls_back_to_sequential():
+    g = rmat_graph(24, 60, n_labels=4, seed=9, undirected=True)
+    cfg = MatchConfig.for_graph(g, cap=1024, root_block=32)
+    a = mine(g, MiningConfig(sigma=2, lam=1.0, metric="mis_exact",
+                             max_pattern_size=3, match=cfg,
+                             execution="sequential"))
+    b = mine(g, MiningConfig(sigma=2, lam=1.0, metric="mis_exact",
+                             max_pattern_size=3, match=cfg,
+                             execution="batched"))
+    assert _stat_triples(a) == _stat_triples(b)
+
+
+def test_batched_timeout_flag():
+    g = rmat_graph(120, 700, n_labels=2, seed=5, undirected=True)
+    cfg = MatchConfig.for_graph(g, cap=1024, root_block=32)
+    res = mine(g, MiningConfig(sigma=2, lam=0.0, metric="mis",
+                               max_pattern_size=5, time_limit_s=0.0,
+                               match=cfg, execution="batched"))
+    assert res.timed_out
+    assert res.searched == 0  # nothing ran a block before the deadline

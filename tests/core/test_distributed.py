@@ -39,13 +39,53 @@ _SCRIPT = textwrap.dedent("""
     print("DISTRIBUTED_OK", flush=True)
 """)
 
+_BATCHED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    assert len(jax.devices()) == 8
+    from repro.core import MatchConfig, MiningConfig, initial_candidates
+    from repro.core.distributed import distributed_batched_supports
+    from repro.core.flexis import evaluate_pattern
+    from repro.core.graph import DeviceGraph
+    from repro.data.synthetic import rmat_graph
 
-@pytest.mark.slow
-def test_distributed_equals_single_device():
+    g = rmat_graph(200, 1200, n_labels=2, seed=3, undirected=True)
+    cfg = MatchConfig.for_graph(g, cap=2048, root_block=32)
+    pats = initial_candidates(g)[:6]
+    dg = DeviceGraph.from_host(g)
+    mcfg = MiningConfig(sigma=2, lam=1.0, metric="mis_luby", complete=True,
+                        match=cfg, execution="sequential")
+    single = [evaluate_pattern(g, dg, p, 10**6, mcfg).support for p in pats]
+    sup, found = distributed_batched_supports(
+        g, pats, [10**6] * len(pats), match_cfg=cfg, complete=True)
+    assert sup.tolist() == single, (sup.tolist(), single)
+    # per-pattern early exit: every pattern reaches min(tau, full support)
+    taus = [max(1, s // 2) for s in single]
+    sup2, _ = distributed_batched_supports(g, pats, taus, match_cfg=cfg)
+    for s2, t, full in zip(sup2, taus, single):
+        assert s2 >= min(t, full), (s2, t, full)
+    print("DISTRIBUTED_BATCHED_OK", flush=True)
+""")
+
+
+def _run_subprocess(script: str) -> "subprocess.CompletedProcess":
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+    return subprocess.run([sys.executable, "-c", script], env=env,
                           capture_output=True, text=True, timeout=600,
                           cwd=os.path.dirname(os.path.dirname(
                               os.path.dirname(os.path.abspath(__file__)))))
+
+
+@pytest.mark.slow
+def test_distributed_equals_single_device():
+    proc = _run_subprocess(_SCRIPT)
     assert "DISTRIBUTED_OK" in proc.stdout, proc.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_distributed_batched_pattern_axis():
+    """Roots sharded × patterns batched ≡ per-pattern single-device mining."""
+    proc = _run_subprocess(_BATCHED_SCRIPT)
+    assert "DISTRIBUTED_BATCHED_OK" in proc.stdout, proc.stderr[-3000:]

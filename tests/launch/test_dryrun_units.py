@@ -9,14 +9,14 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import jax_compat
 from repro.launch.dryrun import (
     _fix_divisibility, collective_bytes_from_hlo,
 )
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax_compat.make_mesh(shape, names)
 
 
 def test_collective_parser_counts_psum():
@@ -27,7 +27,8 @@ def test_collective_parser_counts_psum():
 
     x = jnp.ones((128, 64), jnp.float32)
     hlo = (
-        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P()))
+        jax.jit(jax_compat.shard_map(f, mesh=mesh, in_specs=(P(),),
+                                     out_specs=P()))
         .lower(x).compile().as_text())
     stats = collective_bytes_from_hlo(hlo)
     assert stats["count"] >= 1
@@ -47,8 +48,19 @@ def test_collective_parser_on_synthetic_hlo():
     assert stats["all-gather"] == 8 * 128 * 2
 
 
+def _shape_only_mesh(shape, names):
+    """_fix_divisibility/_axis_size read only axis_names + devices.shape, so
+    tests can use a stub and stay independent of the process device count
+    (a real (2, 4) mesh would need 8 devices — and whether that works would
+    depend on whether another test initialized jax first)."""
+    import types
+
+    return types.SimpleNamespace(axis_names=tuple(names),
+                                 devices=np.empty(shape))
+
+
 def test_fix_divisibility_relocates_axis():
-    mesh = _mesh((2, 4), ("data", "model"))
+    mesh = _shape_only_mesh((2, 4), ("data", "model"))
     # 8 experts on a 4-way axis is fine; 6 is not → move to last dividing dim
     spec = _fix_divisibility(P("model", None, None), (6, 12, 16), mesh)
     assert spec == P(None, None, "model")
@@ -61,14 +73,36 @@ def test_fix_divisibility_relocates_axis():
 
 
 def test_constrain_divisibility_guard():
-    from repro.models.sharding import constrain, use_rules
+    # needs a real 2-way model axis; forced host devices must be set before
+    # jax initializes, so run isolated (same pattern as test_distributed)
+    import os
+    import subprocess
+    import sys
+    import textwrap
 
-    mesh = _mesh((1, 2), ("data", "model"))
-    with use_rules(mesh):
-        @jax.jit
-        def f(x):
-            return constrain(x, "batch", None, "heads", None)
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp
+        from repro import jax_compat
+        from repro.models.sharding import constrain, use_rules
 
-        # 3 heads on a 2-way model axis → guard must drop the constraint
-        out = f(jnp.ones((2, 4, 3, 8)))
-        assert out.shape == (2, 4, 3, 8)
+        mesh = jax_compat.make_mesh((1, 2), ("data", "model"))
+        with use_rules(mesh):
+            @jax.jit
+            def f(x):
+                return constrain(x, "batch", None, "heads", None)
+
+            # 3 heads on a 2-way model axis -> guard must drop the constraint
+            out = f(jnp.ones((2, 4, 3, 8)))
+            assert out.shape == (2, 4, 3, 8)
+        print("CONSTRAIN_GUARD_OK", flush=True)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=300,
+        cwd=os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    assert "CONSTRAIN_GUARD_OK" in proc.stdout, proc.stderr[-3000:]

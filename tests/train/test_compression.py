@@ -32,15 +32,17 @@ def test_error_feedback_reduces_bias():
 
 
 def test_compressed_psum_single_device():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import jax_compat
+
+    mesh = jax_compat.make_mesh((1,), ("data",))
     g = {"w": jnp.asarray([1.0, -2.0, 3.0])}
 
     def f(g):
         out, _ = compressed_psum(g, "data")
         return out
 
-    got = jax.shard_map(f, mesh=mesh, in_specs=({"w": jax.sharding.PartitionSpec()},),
-                        out_specs={"w": jax.sharding.PartitionSpec()})(g)
+    got = jax_compat.shard_map(
+        f, mesh=mesh, in_specs=({"w": jax.sharding.PartitionSpec()},),
+        out_specs={"w": jax.sharding.PartitionSpec()})(g)
     np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(g["w"]),
                                atol=0.02)
