@@ -81,9 +81,60 @@ def _bench_batched_level(rows):
         })
 
 
+def _bench_expansion_plane(rows):
+    """One batched mining level under each expansion plane (PR 2 tentpole).
+
+    `xla` is the production CPU path; `pallas_interp` runs the fused kernel
+    in interpret mode (this container has no TPU), so its time is the
+    interpreter's, not the hardware's — the row exists to pin *bit-exact
+    parity* (parity=1.0) and to give TPU runs a ready-made A/B harness
+    (set pallas_interpret=False there).
+    """
+    import dataclasses
+
+    from repro.core import MatchConfig
+    from repro.core.batched import evaluate_level_batched
+    from repro.core.flexis import initial_candidates
+    from repro.core.graph import DeviceGraph
+
+    n = 1000 if SMOKE else 4000
+    g = _bounded_degree_graph(n, deg=2, n_labels=8)
+    dev_g = DeviceGraph.from_host(g)
+    cfg_x = dataclasses.replace(
+        MatchConfig.for_graph(g, cap=64, root_block=64), two_phase=False)
+    cfg_p = dataclasses.replace(cfg_x, expansion="pallas")
+    P = 8
+    cands = initial_candidates(g)[:P]
+    taus = [10**6] * len(cands)
+    reps = bench_iters(3, smoke=1)
+
+    outs = {}
+    times = {}
+    for name, cfg in (("xla", cfg_x), ("pallas_interp", cfg_p)):
+        evaluate_level_batched(g, dev_g, cands, taus, "mis", cfg,
+                               complete=True)  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            outs[name], _, _ = evaluate_level_batched(
+                g, dev_g, cands, taus, "mis", cfg, complete=True)
+        times[name] = (time.perf_counter() - t0) / reps
+    parity = float(all(
+        (a.support, a.embeddings_found, a.overflowed)
+        == (b.support, b.embeddings_found, b.overflowed)
+        for a, b in zip(outs["xla"], outs["pallas_interp"])))
+    for name in ("xla", "pallas_interp"):
+        rows.append({
+            "name": f"exec_time/expansion_plane/{name}/n{n}/P{P}",
+            "us_per_call": round(times[name] * 1e6, 1),
+            "derived": parity,  # 1.0 = planes bit-identical on this level
+            "speedup": round(times["xla"] / times[name], 3),
+        })
+
+
 def main() -> None:
     rows = []
     _bench_batched_level(rows)
+    _bench_expansion_plane(rows)
     for ds in BENCH_DATASETS:
         for sigma in SUPPORTS:
             for name, kw in VARIANTS:

@@ -108,6 +108,59 @@ def main() -> None:
                  "us_per_call": round(us_b, 1),
                  "derived": round(us_s / us_b, 2)})  # speedup vs 16 singles
 
+    # fused frontier expansion (PR 2): whole match_block through the XLA
+    # pipeline (production CPU path) vs the fused Pallas kernel.  On this
+    # CPU container the kernel runs in interpret mode, so its wall-clock is
+    # not the hardware number — the row documents *bit-exact parity*
+    # (derived=1.0) per the acceptance contract; on TPU pass
+    # pallas_interpret=False to measure the fused kernel itself.
+    import dataclasses as _dc
+
+    from repro.core import MatchConfig, build_graph
+    from repro.core.flexis import initial_candidates
+    from repro.core.generation import generate_new_patterns
+    from repro.core.graph import DeviceGraph
+    from repro.core.matcher import match_block
+    from repro.core.plan import make_plan as _make_plan
+
+    fn_n = 500 if SMOKE else 4000
+    fdeg = 4
+    fsrc = np.repeat(np.arange(fn_n), fdeg)
+    fdst = rng.integers(0, fn_n, fn_n * fdeg)
+    fg = build_graph(fn_n, np.stack([fsrc, fdst], 1),
+                     rng.integers(0, 4, fn_n), undirected=True)
+    fdev = DeviceGraph.from_host(fg)
+    fcfg = _dc.replace(
+        MatchConfig.for_graph(fg, cap=256 if SMOKE else 2048,
+                              root_block=256),
+        two_phase=False)
+    fcfg_p = _dc.replace(fcfg, expansion="pallas")
+    fpats = initial_candidates(fg)
+    fk3 = generate_new_patterns(fpats[:6])
+    assert fk3, "graph yields no size-3 candidates"
+    fplan = _make_plan(fk3[0], fg)
+    assert fplan.k == 3
+
+    geo = f"cap{fcfg.cap}C{fcfg.chunk}k{fplan.k}"
+    xla_out = match_block(fdev, fplan, jnp.int32(0), fcfg)
+    pal_out = match_block(fdev, fplan, jnp.int32(0), fcfg_p)
+    parity = float(
+        int(xla_out[1]) == int(pal_out[1])
+        and int(xla_out[2]) == int(pal_out[2])
+        and bool(xla_out[3]) == bool(pal_out[3])
+        and bool(np.array_equal(np.asarray(xla_out[0]),
+                                np.asarray(pal_out[0]))))
+    cands_per_call = fcfg.cap * fcfg.chunk * fcfg.max_chunks * (fplan.k - 1)
+    us = _time(lambda: match_block(fdev, fplan, jnp.int32(0), fcfg), iters=10)
+    rows.append({"name": f"kernel/frontier_expand_xla/{geo}",
+                 "us_per_call": round(us, 1),
+                 "derived": round(cands_per_call / (us * 1e-6) / 1e6, 2)})  # M cand/s
+    us_p = _time(lambda: match_block(fdev, fplan, jnp.int32(0), fcfg_p),
+                 iters=2 if SMOKE else 5)
+    rows.append({"name": f"kernel/frontier_expand_pallas_interp/{geo}",
+                 "us_per_call": round(us_p, 1),
+                 "derived": parity})  # 1.0 = bit-exact parity with xla plane
+
     # embedding bag (jnp path)
     from repro.models.embedding import embedding_bag_apply, embedding_bag_init
 

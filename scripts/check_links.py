@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs tree (CI `docs` job; no deps).
+
+Scans README.md, ROADMAP.md, CHANGES.md, PAPER(S).md and everything under
+docs/ for inline markdown links `[text](target)`:
+
+  * relative file targets must exist (anchors stripped);
+  * `#anchor` / `file.md#anchor` targets must match a heading slug in the
+    target document;
+  * absolute URLs (http/https/mailto) are recorded but not fetched — CI has
+    no network guarantee and docs shouldn't flake on remote outages.
+
+Exit 0 if clean, 1 with a per-link report otherwise.
+
+    python scripts/check_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SCAN = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md", "PAPERS.md",
+        "ISSUE.md")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading → anchor slug (close enough for our docs)."""
+    s = re.sub(r"[`*_~]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def strip_fenced_blocks(text: str) -> str:
+    """Drop ``` fenced code blocks (their '# lines' are not headings)."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def heading_slugs(md_path: Path) -> set:
+    text = strip_fenced_blocks(md_path.read_text())
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md: Path, root: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if path_part and not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+            continue
+        if anchor:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ""):
+                continue  # anchors into non-markdown are out of scope
+            if slugify(anchor) not in heading_slugs(dest):
+                errors.append(
+                    f"{md.relative_to(root)}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parents[1]
+    files = [root / f for f in SCAN if (root / f).exists()]
+    files += sorted((root / "docs").glob("**/*.md"))
+    errors = []
+    for md in files:
+        errors += check_file(md, root)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"[check_links] {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -32,6 +32,14 @@ Compiled programs are cached: one executable per (metric, k, match
 geometry) python callable (``_step_fn`` below), with XLA's jit cache keying
 the remaining shape axes (pattern-bucket size P, graph size).  Levels and
 whole mining runs reuse executables instead of re-tracing.
+
+Expansion planes compose transparently: with
+``MatchConfig.expansion == "pallas"`` the vmapped ``match_block`` lowers
+its fused level kernel with the pattern axis as a leading *grid*
+dimension (JAX's Pallas batching rule), so a batched level is still one
+kernel launch per expansion level — not P re-entries.  Results stay
+bit-identical across (execution plane × expansion plane); see
+``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -77,14 +85,25 @@ DEFAULT_MAX_BATCH = 64
 
 @functools.lru_cache(maxsize=None)
 def _step_fn(metric: str, k: int, cfg: MatchConfig):
-    """Jitted batched block step.
+    """Jitted batched block step for one (metric, k, match geometry).
 
     Signature of the returned callable:
         step(dev_g, plans, block_start, state, taus)
             -> (state', values, found, overflowed)
-    where every per-pattern array carries a leading P axis and `values` is
-    the metric's running support (int32 counts for mis/*, int32 MNI minima,
-    float32 fractional mass).
+
+    Shapes/dtypes (P = padded pattern-bucket size, n = graph vertices):
+      dev_g:   DeviceGraph pytree (unbatched; broadcasts over P).
+      plans:   PatternPlan pytree with a leading P axis on every array
+               field (`stack_plans`).
+      block_start: () int32 — shared root-block offset.
+      state:   metric state, leading P axis —
+               mis/mis_luby: ((P, ⌈n/32⌉) uint32 bitmaps, (P,) int32 counts)
+               mni: (P, k, n) bool image tables
+               frac: (P, k, n) float32 count tables.
+      taus:    (P,) int32 device-side freeze guard (mis/mis_luby only).
+      values:  (P,) running support — int32 counts/minima, float32 mass.
+      found:   (P,) int32 embeddings enumerated this block;
+      overflowed: (P,) bool frontier-capacity flags.
     """
 
     if metric in ("mis", "mis_luby"):
@@ -153,6 +172,7 @@ def clear_program_cache() -> None:
 # ---------------------------------------------------------------------------
 
 def _state_init(metric: str, P: int, k: int, n: int):
+    """Zeroed metric state with a leading P pattern axis (see `_step_fn`)."""
     if metric in ("mis", "mis_luby"):
         return (jnp.zeros((P, mis_lib.bitmap_words(n)), jnp.uint32),
                 jnp.zeros((P,), jnp.int32))
@@ -200,9 +220,12 @@ class PatternOutcome:
 
 @dataclasses.dataclass
 class BatchedResult:
-    supports: np.ndarray          # (P,) metric supports (≥ tau ⇒ frequent)
-    found: np.ndarray             # (P,) embeddings enumerated
-    overflowed: np.ndarray        # (P,) bool
+    """Level result arrays aligned with the input pattern list (length P₀ =
+    number of requested patterns, NOT the padded device bucket size)."""
+
+    supports: np.ndarray          # (P₀,) int64 metric supports (≥ tau ⇒ frequent)
+    found: np.ndarray             # (P₀,) int64 embeddings enumerated
+    overflowed: np.ndarray        # (P₀,) bool
 
 
 def _mine_group(
@@ -328,12 +351,22 @@ def evaluate_level_batched(
 ) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
     """Evaluate a whole candidate level with the batched data plane.
 
-    Candidates may mix pattern sizes (edge-extension generation); they are
-    grouped by k — and each group split into ≤ ``max_batch`` slices to bound
-    transient device memory — with each slice running as one vmapped
-    program.  Returns (outcomes aligned with the input — ``None`` for
-    candidates not reached before a timeout —, timed_out,
-    peak_device_state_bytes).
+    Args:
+      host_g/dev_g: the data graph and its device mirror.
+      patterns: sequence of `Pattern` (sizes may mix — edge-extension
+        generation); taus: same-length int thresholds.
+      metric: one of ``("mis", "mis_luby", "mni", "frac")``.
+      cfg: `MatchConfig` — both its execution geometry and its
+        ``expansion`` plane apply to every pattern of the level.
+      complete: disable τ early exit (exact metric values).
+      deadline: ``time.monotonic()`` cutoff; max_batch: pattern-axis cap.
+
+    Candidates are grouped by k — and each group split into ≤ ``max_batch``
+    slices to bound transient device memory (peak transient is
+    ``bucket_size(P) · (state + transient_match_bytes)``) — with each slice
+    running as one vmapped program.  Returns (outcomes aligned with the
+    input — ``None`` for candidates not reached before a timeout —,
+    timed_out, peak_device_state_bytes).
     """
     assert len(patterns) == len(taus)
     assert metric in _BATCHABLE_METRICS, metric
@@ -381,13 +414,18 @@ def batched_mis_supports(
     *,
     complete: bool = False,
 ) -> BatchedResult:
-    """mIS supports for a whole same-k candidate level in batched steps."""
+    """mIS supports for a whole same-k candidate level in batched steps.
+
+    patterns/taus: same-length sequences; returns a `BatchedResult` whose
+    arrays align with the input order (see the class docstring).  Runs the
+    full level to completion unless per-pattern τ early exit applies.
+    """
     assert len(patterns) == len(taus) and len(patterns) > 0
     dev_g = DeviceGraph.from_host(host_g)
     outcomes, _, _ = evaluate_level_batched(
         host_g, dev_g, patterns, taus, "mis", cfg, complete=complete)
     return BatchedResult(
-        supports=np.asarray([o.support for o in outcomes]),
+        supports=np.asarray([o.support for o in outcomes], np.int64),
         found=np.asarray([o.embeddings_found for o in outcomes], np.int64),
         overflowed=np.asarray([o.overflowed for o in outcomes], bool),
     )

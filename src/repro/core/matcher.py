@@ -21,6 +21,20 @@ size (plans are data, not static arguments).  Because plans are data,
 batched data plane (``core/batched.py``) runs a whole same-k candidate
 level as one program, and ``core/distributed.py`` composes that axis with
 root sharding under ``shard_map``.
+
+Two expansion planes implement the level step (``MatchConfig.expansion``):
+
+  * ``"xla"`` — the reference pipeline below (`_expand_level`): one XLA op
+    chain per chunk, with the candidate grid and frontier tables spilling
+    to HBM between stages.  Optionally two-phase (cheap filters → compact
+    → bisect survivors only).
+  * ``"pallas"`` — the fused kernel (``repro.kernels.frontier_expand``):
+    the whole level runs as one Pallas program with the frontier tile and
+    CSR arrays VMEM-resident across chunks.  Bit-identical to the
+    single-phase XLA pipeline (survivor order included); under ``vmap``
+    the pattern axis becomes a kernel-grid dimension, so a batched level
+    is still one launch.  See ``docs/kernels.md`` for the interpret-mode
+    fallback rule.
 """
 from __future__ import annotations
 
@@ -81,7 +95,11 @@ jax.tree_util.register_pytree_node(PatternPlan, _plan_flatten, _plan_unflatten)
 
 @dataclasses.dataclass(frozen=True)
 class MatchConfig:
-    """Static matcher geometry (one jit cache entry per distinct config + k)."""
+    """Static matcher geometry (one jit cache entry per distinct config + k).
+
+    Hashable & frozen — it is a ``static_argnames`` entry of ``match_block``,
+    so every distinct config value is a separate compiled program.
+    """
 
     cap: int = 8192          # frontier capacity (embeddings per level)
     root_block: int = 4096   # roots processed per host iteration
@@ -92,11 +110,37 @@ class MatchConfig:
     # cheap filters (label/degree/injectivity) on the full (cap × chunk)
     # grid, compact survivors, and run the edge-existence bisection only on
     # the compacted lanes — label selectivity pays for the extra compaction.
+    # Only meaningful on the "xla" plane; the fused kernel keeps the grid
+    # VMEM-resident, which is what two-phase's HBM-traffic cut approximates.
     two_phase: bool = False
+    # expansion plane: "xla" = per-chunk op pipeline (reference), "pallas" =
+    # fused per-level kernel (repro.kernels.frontier_expand), bit-identical
+    # to the single-phase xla pipeline.
+    expansion: str = "xla"
+    # run the Pallas kernel in interpret mode (required off-TPU; this
+    # container is CPU-only).  Ignored when expansion == "xla".
+    pallas_interpret: bool = True
+
+    def __post_init__(self):
+        if self.expansion not in ("xla", "pallas"):
+            raise ValueError('expansion must be "xla" or "pallas"')
+        # two_phase is an xla-plane knob; the fused kernel is single-phase by
+        # construction.  Normalize so a pallas config never *claims* two-phase
+        # semantics (truncation content under overflow differs between the
+        # two-phase pipeline and the single-phase planes — always flagged via
+        # `overflowed`, but configs should say what they run).
+        if self.expansion == "pallas" and self.two_phase:
+            object.__setattr__(self, "two_phase", False)
+        # pallas_interpret is a pallas-plane knob; canonicalize it on the
+        # xla plane so configs that run the identical program hash equal
+        # (MatchConfig keys both the match_block jit cache and the batched
+        # step-program cache).
+        if self.expansion == "xla" and not self.pallas_interpret:
+            object.__setattr__(self, "pallas_interpret", True)
 
     @classmethod
     def for_graph(cls, g: DataGraph, *, cap: int = 8192, root_block: int = 4096,
-                  chunk: int = 64) -> "MatchConfig":
+                  chunk: int = 64, expansion: str = "xla") -> "MatchConfig":
         """Right-size the geometry to the graph: the frontier capacity and
         root blocks never usefully exceed the graph scale, and the chunk
         width never usefully exceeds the max degree."""
@@ -113,13 +157,25 @@ class MatchConfig:
             # measured 8–9× matcher speedup at identical results on both
             # label-rich and label-poor graphs (EXPERIMENTS.md §Perf cell 3)
             two_phase=True,
+            expansion=expansion,
         )
 
 
 def transient_match_bytes(cfg: MatchConfig, k: int) -> int:
-    """Per-pattern transient device footprint of one match step (telemetry):
-    two frontier tables plus the candidate-expansion grid.  Shared by the
-    sequential and batched planes so their peak_device_bytes agree."""
+    """Transient device footprint of one match step for ONE pattern (bytes).
+
+    Counts the two (cap, k) int32 frontier tables plus the
+    (cap × chunk) candidate-expansion grid with its per-lane intermediates
+    (≈ k + 8 int32 each: candidate rows, mask/cumsum/dest lanes).
+
+    This is a *per-pattern* number: the batched plane runs P patterns per
+    program (leading pattern axis), so its peak transient footprint is
+    ``bucket_size(P) · transient_match_bytes(cfg, k)`` — exactly how
+    ``core/batched.py`` accounts it, keeping sequential and batched
+    ``peak_device_bytes`` telemetry consistent.  On the "pallas" expansion
+    plane the same buffers exist but live in VMEM scratch for the duration
+    of a level instead of spilling to HBM between pipeline stages.
+    """
     emb = cfg.cap * k * 4
     return emb * 2 + cfg.cap * cfg.chunk * (k + 8) * 4
 
@@ -127,7 +183,12 @@ def transient_match_bytes(cfg: MatchConfig, k: int) -> int:
 def edge_exists(indptr, indices, u, v, n_iters: int):
     """Branchless bounded binary search: is v in sorted indices[indptr[u]:indptr[u+1]]?
 
-    u, v: int32 arrays (broadcast-compatible). Returns bool array.
+    indptr: (n+1,) int32 CSR row pointers; indices: (E,) int32 sorted within
+    each row.  u, v: int32 arrays (broadcast-compatible); entries must be
+    pre-clipped to [0, n).  n_iters must be ≥ ceil(log2(max_degree + 1)).
+    Returns a bool array of the broadcast shape.  Pure dataflow (no host
+    control), so it runs unchanged inside jit, vmap, shard_map, and the
+    Pallas kernel body.
     """
     lo = indptr[u].astype(jnp.int32)
     hi = (indptr[u + 1]).astype(jnp.int32)
@@ -144,6 +205,12 @@ def edge_exists(indptr, indices, u, v, n_iters: int):
 
 
 def device_graph_tuple(g: DataGraph) -> DeviceGraph:
+    """Upload a host `DataGraph` as the int32 jnp mirror the matcher reads.
+
+    Returns a `DeviceGraph` pytree: labels (n,), out/in_indptr (n+1,),
+    out/in_indices (E,) — all int32; edgeless graphs get 1-element sentinel
+    index arrays so gathers stay well-formed (see `DeviceGraph.from_host`).
+    """
     return DeviceGraph.from_host(g)
 
 
@@ -174,7 +241,19 @@ def _init_roots(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
 
 def _expand_level(g: DeviceGraph, plan: PatternPlan, emb, count, level: int,
                   cfg: MatchConfig):
-    """Extend every partial embedding by pattern-order vertex `level`."""
+    """Extend every partial embedding by pattern-order vertex `level`.
+
+    emb: (cap, k) int32 frontier (columns ≥ level are -1); count: () int32
+    valid rows.  Returns (out_emb (cap, k) int32, out_count () int32,
+    found () int32, overflowed () bool); survivors are packed in
+    (chunk, row, position) order — the order the greedy-mIS metric consumes.
+    Dispatches to the fused Pallas kernel when cfg.expansion == "pallas"
+    (bit-identical to the single-phase pipeline below).
+    """
+    if cfg.expansion == "pallas":
+        from repro.kernels.frontier_expand.ops import frontier_expand_level
+
+        return frontier_expand_level(g, plan, emb, count, level, cfg)
     cap, C, k = cfg.cap, cfg.chunk, plan.k
     i = level  # python int (static): column being filled
     n_idx = g.out_indices.shape[0]
@@ -276,12 +355,25 @@ def match_block(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Enumerate embeddings rooted in one vertex block.
 
+    Args:
+      g:    DeviceGraph pytree (int32 arrays; see `device_graph_tuple`).
+      plan: PatternPlan pytree — *data*, so one compiled program serves all
+            patterns of size k.  A leading pattern axis on every plan field
+            (from `plan.stack_plans`) makes this function `vmap`-able; with
+            cfg.expansion == "pallas" that axis becomes a kernel-grid
+            dimension rather than a per-pattern kernel re-entry.
+      block_start: () int32 — first root vertex of this block.
+      cfg:  static MatchConfig (hashable; keys the jit cache with k).
+
     Returns (emb, count, found, overflowed):
       emb:    (cap, k) int32 — embeddings in pattern-order columns, row-major
-              in (root, discovery) order (so row index = greedy priority).
-      count:  rows of `emb` that are valid (≤ cap).
-      found:  total embeddings enumerated before capacity clipping.
-      overflowed: bool — some level produced more than `cap` rows.
+              in (root, discovery) order (so row index = greedy priority);
+              invalid rows are -1-filled.
+      count:  () int32 — rows of `emb` that are valid (≤ cap).
+      found:  () int32 — embeddings enumerated in the last level before
+              capacity clipping.
+      overflowed: () bool — some level produced more than `cap` rows (results
+              are truncated, never silently wrong).
     """
     emb, count = _init_roots(g, plan, block_start, cfg)
     found = count

@@ -1,0 +1,36 @@
+"""Public wrapper: drop-in replacement for the XLA expansion pipeline.
+
+``core/matcher._expand_level`` dispatches here when
+``MatchConfig.expansion == "pallas"``; the whole expansion level then runs
+as one fused Pallas program (see ``kernel.py``) instead of the per-chunk
+XLA op chain.  Under ``vmap`` (the batched data plane) the pattern axis
+becomes a leading kernel-grid dimension — one launch per level, not one
+per pattern.
+"""
+from __future__ import annotations
+
+from .kernel import frontier_expand
+
+
+def frontier_expand_level(g, plan, emb, count, level: int, cfg, *,
+                          interpret=None):
+    """Same signature/result as the single-phase ``_expand_level`` pipeline.
+
+    g: DeviceGraph; plan: PatternPlan; emb (cap, k) int32; count () int32.
+    interpret defaults to ``cfg.pallas_interpret`` (True on this CPU
+    container; set False on TPU for the fused lowering).
+    Returns (out_emb (cap, k) int32, out_count (), found (), ovf () bool).
+    """
+    if interpret is None:
+        interpret = cfg.pallas_interpret
+    i = level
+    return frontier_expand(
+        g.labels, g.out_indptr, g.out_indices, g.in_indptr, g.in_indices,
+        emb, count,
+        plan.anchor_pos[i], plan.anchor_out[i], plan.cand_label[i],
+        plan.min_out[i], plan.min_in[i],
+        plan.check_out[i], plan.check_in[i],
+        level=i, k=plan.k, cap=cfg.cap, chunk=cfg.chunk,
+        max_chunks=cfg.max_chunks, bisect_iters=cfg.bisect_iters, n=g.n,
+        interpret=interpret,
+    )

@@ -37,6 +37,20 @@ def main(argv=None) -> int:
                     help="data plane: one vmapped program per same-k "
                          "candidate group (batched, default) or the paper's "
                          "per-pattern loop (sequential oracle)")
+    ap.add_argument("--expansion", default="xla",
+                    choices=["xla", "pallas"],
+                    help="expansion plane inside match_block: per-chunk XLA "
+                         "op pipeline (reference) or the fused Pallas "
+                         "frontier kernel — bit-identical to the "
+                         "single-phase xla pipeline (when a level overflows "
+                         "cap, truncation content may differ from the "
+                         "two-phase xla pipeline; overflow is always "
+                         "flagged)")
+    ap.add_argument("--pallas-interpret", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="run the Pallas kernel in interpret mode: auto = "
+                         "off on TPU, on elsewhere (interpret is required "
+                         "off-TPU; the fused lowering only exists on TPU)")
     ap.add_argument("--max-size", type=int, default=4)
     ap.add_argument("--time-limit", type=float, default=1800.0,
                     help="paper uses a 30-minute timeout")
@@ -50,11 +64,20 @@ def main(argv=None) -> int:
     print(f"[mine] {args.dataset}×{args.scale}: |V|={g.n} |E|={g.n_edges} "
           f"labels={g.n_labels} (load {time.monotonic() - t0:.1f}s)")
 
+    import dataclasses as _dc
+
+    import jax as _jax
+
+    interpret = (_jax.default_backend() != "tpu"
+                 if args.pallas_interpret == "auto"
+                 else args.pallas_interpret == "on")
     cfg = MiningConfig(
         sigma=args.sigma, lam=args.lam, metric=args.metric,
         generation=args.generation, max_pattern_size=args.max_size,
         time_limit_s=args.time_limit, execution=args.execution,
-        match=MatchConfig.for_graph(g, cap=args.cap),
+        match=_dc.replace(
+            MatchConfig.for_graph(g, cap=args.cap, expansion=args.expansion),
+            pallas_interpret=interpret),
     )
     res = mine(g, cfg)
 

@@ -1,0 +1,26 @@
+"""Docs integrity: the markdown link check that CI's docs job runs must
+pass locally too, and the docs tree the README promises must exist."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+
+
+def test_docs_tree_exists():
+    for name in ("architecture.md", "metrics.md", "kernels.md"):
+        assert (ROOT / "docs" / name).is_file(), f"docs/{name} missing"
+
+
+def test_readme_links_docs():
+    readme = (ROOT / "README.md").read_text()
+    for name in ("docs/architecture.md", "docs/metrics.md",
+                 "docs/kernels.md"):
+        assert name in readme, f"README does not link {name}"
+
+
+def test_markdown_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_links.py"), str(ROOT)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
