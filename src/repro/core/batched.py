@@ -61,9 +61,9 @@ from . import mis as mis_lib
 from . import metrics as metrics_lib
 
 __all__ = [
-    "BatchedResult", "PatternOutcome", "batched_mis_supports",
-    "evaluate_level_batched", "program_cache_stats", "clear_program_cache",
-    "stack_plans",
+    "BatchedResult", "GroupState", "LevelTelemetry", "PatternOutcome",
+    "batched_mis_supports", "evaluate_level_batched", "level_groups",
+    "program_cache_stats", "clear_program_cache", "stack_plans",
 ]
 
 _BATCHABLE_METRICS = ("mis", "mis_luby", "mni", "frac")
@@ -228,6 +228,51 @@ class BatchedResult:
     overflowed: np.ndarray        # (P₀,) bool
 
 
+@dataclasses.dataclass
+class LevelTelemetry:
+    """Aggregate accounting of one level-executor call."""
+
+    state_bytes: int = 0          # peak transient device state (pattern axis)
+    dispatches: int = 0           # device program invocations
+
+
+@dataclasses.dataclass
+class GroupState:
+    """Carried state of one in-flight same-k group, snapshotted per block.
+
+    This is the batched plane's resume unit: everything `_mine_group` needs
+    to continue from root block ``next_block`` — the (possibly re-stacked)
+    active-set ``bucket_map``, the device metric state for the current
+    bucket (kept as device arrays here; the session serializes them to
+    logical host arrays only when it actually persists a snapshot), and the
+    per-pattern host accumulators for the whole group (P₀-aligned).
+    """
+
+    next_block: int               # next root block to run
+    bucket_map: np.ndarray        # (P_pad,) int — group index per row, -1 pad
+    state: object                 # device metric state, leading P_pad axis
+    supports: np.ndarray          # (P₀,) int64
+    found: np.ndarray             # (P₀,) int64
+    overflowed: np.ndarray        # (P₀,) bool
+    blocks_run: np.ndarray        # (P₀,) int64
+    dispatches: int = 0
+
+
+def level_groups(patterns: Sequence[Pattern], max_batch: int):
+    """Deterministic (k, slice-offset, indices) schedule of a level.
+
+    Shared by the batched and distributed level executors — and by the
+    session runtime, whose mid-level cursor is the (k, lo) pair — so a
+    resumed level re-derives the exact same grouping.
+    """
+    groups: dict = {}
+    for i, p in enumerate(patterns):
+        groups.setdefault(p.k, []).append(i)
+    for k in sorted(groups):
+        for lo in range(0, len(groups[k]), max_batch):
+            yield k, lo, groups[k][lo:lo + max_batch]
+
+
 def _mine_group(
     dev_g: DeviceGraph,
     plans: List[PatternPlan],
@@ -238,8 +283,11 @@ def _mine_group(
     complete: bool,
     n: int,
     deadline: Optional[float] = None,
-) -> Tuple[List[Optional[PatternOutcome]], bool]:
-    """Run one same-k candidate group level-wise; returns (outcomes, timed_out).
+    resume: Optional[GroupState] = None,
+    on_block=None,
+) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
+    """Run one same-k candidate group level-wise; returns
+    (outcomes, timed_out, dispatches).
 
     Per-pattern histories reproduce the sequential loop exactly: a pattern
     accumulates (found, overflowed, blocks) for precisely the block prefix the
@@ -250,6 +298,14 @@ def _mine_group(
     block) get an outcome; still-in-flight patterns return ``None`` — the
     sequential loop's all-or-nothing timeout contract, where a pattern is
     either fully evaluated or not reported at all.
+
+    ``resume`` continues a previously snapshotted `GroupState` (its plans
+    bucket is re-derived from ``plans`` + the saved active-set map — pad
+    rows may rebind to a different plan, which is unobservable: their τ
+    guard is 0 and their accounting rows are dead); ``on_block`` is called
+    with the carried `GroupState` after every block that leaves the group
+    still in flight.  Continuation is bit-identical: the per-pattern
+    (block, update) history of a resumed run equals the uninterrupted one.
     """
     P0 = len(plans)
     k = plans[0].k
@@ -261,11 +317,6 @@ def _mine_group(
     if not complete:
         dev_tau_full[:] = np.minimum(taus_np, _INT32_MAX)
 
-    supports = np.zeros(P0, np.int64)
-    found = np.zeros(P0, np.int64)
-    ovf = np.zeros(P0, bool)
-    blocks_run = np.zeros(P0, np.int64)
-
     step = _step_fn(metric, k, cfg)
 
     def bucket_taus(bucket_map: np.ndarray) -> jnp.ndarray:
@@ -273,24 +324,41 @@ def _mine_group(
         return jnp.asarray(
             np.where(bucket_map >= 0, dev_tau_full[safe], 0), jnp.int32)
 
-    # current bucket: stacked plans + state + map to group indices (-1 = pad)
-    P_pad = _bucket_size(P0)
-    bucket_map = np.concatenate([np.arange(P0), np.full(P_pad - P0, -1)])
+    if resume is None:
+        supports = np.zeros(P0, np.int64)
+        found = np.zeros(P0, np.int64)
+        ovf = np.zeros(P0, bool)
+        blocks_run = np.zeros(P0, np.int64)
+        # current bucket: stacked plans + state + map to group idx (-1 = pad)
+        P_pad = _bucket_size(P0)
+        bucket_map = np.concatenate([np.arange(P0), np.full(P_pad - P0, -1)])
+        state = _state_init(metric, P_pad, k, n)
+        start_block = 0
+        dispatches = 0
+    else:
+        supports = resume.supports.astype(np.int64).copy()
+        found = resume.found.astype(np.int64).copy()
+        ovf = resume.overflowed.astype(bool).copy()
+        blocks_run = resume.blocks_run.astype(np.int64).copy()
+        bucket_map = np.asarray(resume.bucket_map, np.int64).copy()
+        state = jax.tree_util.tree_map(jnp.asarray, resume.state)
+        start_block = int(resume.next_block)
+        dispatches = int(resume.dispatches)
     plans_cur = _gather_rows(stack_plans(plans),
                              np.where(bucket_map >= 0, bucket_map, 0))
-    state = _state_init(metric, P_pad, k, n)
     taus_dev = bucket_taus(bucket_map)
 
     timed_out = False
     unfinished: set = set()
     n_blocks = -(-n // cfg.root_block)
-    for b in range(n_blocks):
+    for b in range(start_block, n_blocks):
         if deadline is not None and time.monotonic() > deadline:
             timed_out = True
             unfinished = {int(i) for i in bucket_map[bucket_map >= 0]}
             break
         state, values, blk_found, blk_ovf = step(
             dev_g, plans_cur, jnp.int32(b * cfg.root_block), state, taus_dev)
+        dispatches += 1
         values_np = np.asarray(values)
         found_np = np.asarray(blk_found)
         ovf_np = np.asarray(blk_ovf)
@@ -305,24 +373,30 @@ def _mine_group(
         else:
             supports[gi] = values_np[live].astype(np.int64)
 
-        if not early_exit:
-            continue
-        still = gi[supports[gi] < taus_np[gi]]
-        if still.size == 0:
-            break
-        if still.size <= bucket_map.size // 2 and b + 1 < n_blocks:
-            # shrink: re-stack survivors into the next power-of-two bucket
-            pos_of = {g_idx: i for i, g_idx in enumerate(bucket_map)}
-            pos = np.array([pos_of[g_idx] for g_idx in still])
-            pad = _bucket_size(still.size) - still.size
-            sel = np.concatenate([pos, np.full(pad, pos[0])]).astype(np.int64)
-            plans_cur = _gather_rows(plans_cur, sel)
-            state = _gather_rows(state, sel)
-            bucket_map = np.concatenate([still, np.full(pad, -1)])
-            taus_dev = bucket_taus(bucket_map)
-        elif still.size < gi.size:
-            # same bucket; just stop accounting for the finished patterns
-            bucket_map = np.where(np.isin(bucket_map, still), bucket_map, -1)
+        if early_exit:
+            still = gi[supports[gi] < taus_np[gi]]
+            if still.size == 0:
+                break
+            if still.size <= bucket_map.size // 2 and b + 1 < n_blocks:
+                # shrink: re-stack survivors into the next power-of-two bucket
+                pos_of = {g_idx: i for i, g_idx in enumerate(bucket_map)}
+                pos = np.array([pos_of[g_idx] for g_idx in still])
+                pad = _bucket_size(still.size) - still.size
+                sel = np.concatenate([pos, np.full(pad, pos[0])]).astype(np.int64)
+                plans_cur = _gather_rows(plans_cur, sel)
+                state = _gather_rows(state, sel)
+                bucket_map = np.concatenate([still, np.full(pad, -1)])
+                taus_dev = bucket_taus(bucket_map)
+            elif still.size < gi.size:
+                # same bucket; just stop accounting for the finished patterns
+                bucket_map = np.where(np.isin(bucket_map, still), bucket_map, -1)
+
+        if on_block is not None and b + 1 < n_blocks:
+            on_block(GroupState(
+                next_block=b + 1, bucket_map=bucket_map.copy(), state=state,
+                supports=supports.copy(), found=found.copy(),
+                overflowed=ovf.copy(), blocks_run=blocks_run.copy(),
+                dispatches=dispatches))
 
     outcomes: List[Optional[PatternOutcome]] = [
         None if i in unfinished else PatternOutcome(
@@ -334,7 +408,7 @@ def _mine_group(
         )
         for i in range(P0)
     ]
-    return outcomes, timed_out
+    return outcomes, timed_out, dispatches
 
 
 def evaluate_level_batched(
@@ -348,7 +422,8 @@ def evaluate_level_batched(
     complete: bool = False,
     deadline: Optional[float] = None,
     max_batch: int = DEFAULT_MAX_BATCH,
-) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
+    hooks=None,
+) -> Tuple[List[Optional[PatternOutcome]], bool, LevelTelemetry]:
     """Evaluate a whole candidate level with the batched data plane.
 
     Args:
@@ -360,46 +435,66 @@ def evaluate_level_batched(
         ``expansion`` plane apply to every pattern of the level.
       complete: disable τ early exit (exact metric values).
       deadline: ``time.monotonic()`` cutoff; max_batch: pattern-axis cap.
+      hooks: optional level-hooks object (the session runtime's resume
+        surface; see `repro.runtime.session`).  Duck-typed methods —
+        ``resume_outcomes()``: {pattern index → `PatternOutcome`} already
+        computed by a previous process (a group is skipped iff every one of
+        its indices is present); ``resume_dispatches()``: device dispatches
+        already spent on the skipped groups (keeps level telemetry
+        identical across a resume); ``group_resume(k, lo)``: the in-flight
+        `GroupState` for one group, or None; ``on_group_state(k, lo,
+        group_state)``: called after every block of an unfinished group;
+        ``on_group_done(k, lo, idxs, outcomes, dispatches)``: called when a
+        group completes.
 
     Candidates are grouped by k — and each group split into ≤ ``max_batch``
     slices to bound transient device memory (peak transient is
     ``bucket_size(P) · (state + transient_match_bytes)``) — with each slice
     running as one vmapped program.  Returns (outcomes aligned with the
     input — ``None`` for candidates not reached before a timeout —,
-    timed_out, peak_device_state_bytes).
+    timed_out, `LevelTelemetry`).
     """
     assert len(patterns) == len(taus)
     assert metric in _BATCHABLE_METRICS, metric
     assert max_batch >= 1
     outcomes: List[Optional[PatternOutcome]] = [None] * len(patterns)
-    groups: dict = {}
-    for i, p in enumerate(patterns):
-        groups.setdefault(p.k, []).append(i)
+    prefilled = hooks.resume_outcomes() if hooks is not None else None
 
     timed_out = False
-    peak_state_bytes = 0
-    for k in sorted(groups):
-        for lo in range(0, len(groups[k]), max_batch):
-            idxs = groups[k][lo:lo + max_batch]
-            plans = [make_plan(patterns[i], host_g) for i in idxs]
-            group_taus = [taus[i] for i in idxs]
-            peak_state_bytes = max(
-                peak_state_bytes,
-                _bucket_size(len(idxs))
-                * (_state_bytes(metric, k, host_g.n)
-                   + transient_match_bytes(cfg, k)))
-            got, group_timed_out = _mine_group(
-                dev_g, plans, group_taus, metric, cfg,
-                complete=complete, n=host_g.n, deadline=deadline)
-            for i, out in zip(idxs, got):
-                outcomes[i] = out
-            if group_timed_out:
-                timed_out = True
-                break
-        if timed_out:
+    telemetry = LevelTelemetry()
+    if hooks is not None:
+        telemetry.dispatches = int(hooks.resume_dispatches())
+    for k, lo, idxs in level_groups(patterns, max_batch):
+        # state_bytes is pure arithmetic — account skipped groups too, so a
+        # resumed level reports the same peak as the uninterrupted one
+        telemetry.state_bytes = max(
+            telemetry.state_bytes,
+            _bucket_size(len(idxs))
+            * (_state_bytes(metric, k, host_g.n)
+               + transient_match_bytes(cfg, k)))
+        if prefilled is not None and all(i in prefilled for i in idxs):
+            for i in idxs:
+                outcomes[i] = prefilled[i]
+            continue
+        plans = [make_plan(patterns[i], host_g) for i in idxs]
+        group_taus = [taus[i] for i in idxs]
+        resume = hooks.group_resume(k, lo) if hooks is not None else None
+        on_block = (functools.partial(hooks.on_group_state, k, lo)
+                    if hooks is not None else None)
+        got, group_timed_out, dispatches = _mine_group(
+            dev_g, plans, group_taus, metric, cfg,
+            complete=complete, n=host_g.n, deadline=deadline,
+            resume=resume, on_block=on_block)
+        telemetry.dispatches += dispatches
+        for i, out in zip(idxs, got):
+            outcomes[i] = out
+        if hooks is not None and not group_timed_out:
+            hooks.on_group_done(k, lo, idxs, got, dispatches)
+        if group_timed_out:
+            timed_out = True
             break
     assert timed_out or all(o is not None for o in outcomes)
-    return outcomes, timed_out, peak_state_bytes
+    return outcomes, timed_out, telemetry
 
 
 # ---------------------------------------------------------------------------

@@ -19,12 +19,25 @@ on every device regardless of local degree skew — the mitigation is
 structural rather than reactive.  The host round-robins super-blocks, which
 also gives elastic re-entry: a rescheduled mesh just resumes from the
 current super-block with the carried (bitmap, count) state.
+
+Super-blocks are *logical*: a super-block is a fixed run of
+``blocks_per_super`` root blocks, dispatched over the mesh ``ndev`` blocks
+at a time (tail dispatches padded with empty blocks).  Because the logical
+schedule — and therefore the embedding priority order, the per-super-block
+early-exit checks, and the (found, overflowed, blocks_run) accounting — is
+independent of the mesh shape, the carried ``SuperBlockState`` snapshotted
+between super-blocks (`iter_batched_supports`) restores bit-identically on
+any device count: greedy mIS selection over a fixed priority order is
+invariant to how the order is cut into dispatch batches.  The session
+runtime (`repro.runtime`) persists exactly this state for mid-pattern
+resume.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+import time
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +49,14 @@ from repro import jax_compat
 from .graph import DataGraph, DeviceGraph
 from .pattern import Pattern
 from .plan import PatternPlan, make_plan, stack_plans
-from .matcher import MatchConfig, match_block
+from .matcher import MatchConfig, match_block, transient_match_bytes
 from . import mis as mis_lib
+from . import batched as batched_lib
 
 __all__ = ["mining_mesh", "sharded_mis_step", "distributed_support",
-           "sharded_batched_mis_step", "distributed_batched_supports"]
+           "sharded_batched_mis_step", "distributed_batched_supports",
+           "SuperBlockState", "iter_batched_supports",
+           "evaluate_level_distributed"]
 
 
 def mining_mesh(axis: str = "workers", devices=None) -> Mesh:
@@ -144,29 +160,72 @@ def sharded_batched_mis_step(g: DeviceGraph, plans: PatternPlan, block_starts,
 
     plans/bitmaps/counts/taus: leading (P,) pattern axis, replicated.
     block_starts: (ndev,) int32 — one root-block origin per device.
-    Returns (bitmaps, counts, found) with found summed over the mesh, (P,).
+    Returns (bitmaps, counts, found, overflowed) with found summed and
+    overflow OR-ed over the mesh, each (P,).
     """
 
     def step(block_start, bms, cnts):
         def one(plan, bm, cnt, tau):
-            emb, n_valid, found, _ = match_block(g, plan, block_start[0], cfg)
+            emb, n_valid, found, ovf = match_block(g, plan, block_start[0], cfg)
             bm, cnt = _luby_rounds_global(bm, cnt, emb, n_valid, tau, k, n,
                                           cfg.cap, axis)
-            return bm, cnt, found
+            return bm, cnt, found, ovf
 
-        bms, cnts, found = jax.vmap(one)(plans, bms, cnts, taus)
-        return bms, cnts, jax.lax.psum(found, axis)
+        bms, cnts, found, ovf = jax.vmap(one)(plans, bms, cnts, taus)
+        return (bms, cnts, jax.lax.psum(found, axis),
+                jax.lax.psum(ovf.astype(jnp.int32), axis) > 0)
 
     return jax_compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axis), P(), P()),
-        out_specs=(P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
         check_vma=False,
     )(block_starts, bitmaps, counts)
 
 
-def distributed_batched_supports(
+# ---------------------------------------------------------------------------
+# resumable super-block schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuperBlockState:
+    """Carried state of a batched distributed run between super-blocks.
+
+    This is the unit the session runtime checkpoints (mid-pattern resume):
+    ``bitmaps``/``counts`` are the device-side mIS metric state saved as
+    *full logical arrays* — the sharded step replicates them (out_specs
+    ``P()``), so `np.asarray` yields the logical value and a restore on any
+    mesh shape is just handing the host array back to ``shard_map``.  The
+    remaining fields are host-side telemetry accumulators plus the
+    ``next_block`` cursor (in root-block units).
+    """
+
+    next_block: int               # first root block of the next super-block
+    bitmaps: Any                  # (P, ⌈n/32⌉) uint32 — logical/replicated
+    counts: Any                   # (P,) int32
+    found: np.ndarray             # (P,) int64, frozen per pattern at τ
+    overflowed: np.ndarray        # (P,) bool
+    blocks_run: np.ndarray        # (P,) int64, frozen per pattern at τ
+    super_blocks_run: int = 0
+    dispatches: int = 0           # sharded step invocations (telemetry)
+
+    def supports(self) -> np.ndarray:
+        return np.asarray(self.counts, np.int64)
+
+
+def _init_super_block_state(P_: int, n: int) -> SuperBlockState:
+    return SuperBlockState(
+        next_block=0,
+        bitmaps=jnp.zeros((P_, mis_lib.bitmap_words(n)), jnp.uint32),
+        counts=jnp.zeros((P_,), jnp.int32),
+        found=np.zeros(P_, np.int64),
+        overflowed=np.zeros(P_, bool),
+        blocks_run=np.zeros(P_, np.int64),
+    )
+
+
+def iter_batched_supports(
     host_g: DataGraph,
     patterns: Sequence[Pattern],
     taus: Sequence[int],
@@ -175,13 +234,23 @@ def distributed_batched_supports(
     axis: str = "workers",
     match_cfg: Optional[MatchConfig] = None,
     complete: bool = False,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """mIS supports of a same-k candidate batch, mined across the whole mesh.
+    blocks_per_super: Optional[int] = None,
+    state: Optional[SuperBlockState] = None,
+) -> Iterator[SuperBlockState]:
+    """Mine a same-k batch one *logical* super-block at a time.
 
-    Returns (supports, found), each (P,).  Per-pattern semantics match
-    `distributed_support`; the host early-exits the super-block loop once
-    every pattern has reached its τ (each pattern's ``count < τ`` guard
-    freezes its own state as soon as it individually finishes).
+    Yields the carried `SuperBlockState` after every super-block; the caller
+    may stop consuming at any yield, snapshot the state, and later rebuild
+    the iterator with ``state=`` to continue — on the same or a different
+    mesh shape — with bit-identical ``counts``/``bitmaps``/accounting.
+
+    ``blocks_per_super`` fixes the logical super-block width in root blocks
+    (default: the current device count, the legacy schedule).  τ early exit
+    and the per-pattern (found, overflowed, blocks_run) freeze happen at
+    super-block boundaries, so any two runs with the same width agree
+    exactly regardless of ``ndev``; runs with different widths agree on
+    supports but may differ in the telemetry fields (they see different
+    early-exit granularity).
     """
     assert len(patterns) == len(taus) and len(patterns) > 0
     k = patterns[0].k
@@ -194,26 +263,188 @@ def distributed_batched_supports(
     n = host_g.n
     P_ = len(patterns)
     taus_np = np.asarray(taus, np.int64)
+    bps = ndev if blocks_per_super is None else int(blocks_per_super)
+    assert bps >= 1
 
-    bitmaps = jnp.zeros((P_, mis_lib.bitmap_words(n)), jnp.uint32)
-    counts = jnp.zeros((P_,), jnp.int32)
     int32_max = np.iinfo(np.int32).max
     tau_full = np.full(P_, int32_max, np.int64) if complete else taus_np
     tau_dev = jnp.asarray(np.minimum(tau_full, int32_max), jnp.int32)
-    found_total = np.zeros(P_, np.int64)
 
-    stride = ndev * cfg.root_block
-    n_super = -(-n // stride)
-    for s in range(n_super):
-        starts = jnp.asarray(
-            s * stride + np.arange(ndev) * cfg.root_block, jnp.int32)
-        bitmaps, counts, found = sharded_batched_mis_step(
-            dev_g, plans, starts, bitmaps, counts, tau_dev,
-            cfg=cfg, k=k, n=n, axis=axis, mesh=mesh)
-        found_total += np.asarray(found, np.int64)
-        if not complete and bool((np.asarray(counts) >= taus_np).all()):
+    if state is None:
+        state = _init_super_block_state(P_, n)
+    # re-shard on entry: a restored state carries host (logical) arrays
+    bitmaps = jnp.asarray(state.bitmaps, jnp.uint32)
+    counts = jnp.asarray(state.counts, jnp.int32)
+    assert bitmaps.shape == (P_, mis_lib.bitmap_words(n)), bitmaps.shape
+    found = state.found.copy()
+    ovf = state.overflowed.copy()
+    blocks_run = state.blocks_run.copy()
+    next_block = int(state.next_block)
+    super_blocks = int(state.super_blocks_run)
+    dispatches = int(state.dispatches)
+
+    n_blocks = -(-n // cfg.root_block)
+    while next_block < n_blocks:
+        counts_np = np.asarray(counts, np.int64)
+        if not complete and bool((counts_np >= taus_np).all()):
+            return
+        # per-pattern freeze at super-block granularity: a pattern that
+        # already reached τ stops accumulating telemetry (its device state
+        # is frozen anyway by the cnt < τ guard in the Luby rounds)
+        active = np.ones(P_, bool) if complete else counts_np < taus_np
+        stop = min(next_block + bps, n_blocks)
+        sb_found = np.zeros(P_, np.int64)
+        sb_ovf = np.zeros(P_, bool)
+        for lo in range(next_block, stop, ndev):
+            # pad tail dispatches with empty blocks (start ≥ n matches no
+            # roots) so a super-block never leaks into the next one
+            blocks = lo + np.arange(ndev)
+            starts = jnp.asarray(
+                np.where(blocks < stop, blocks * cfg.root_block, n),
+                jnp.int32)
+            bitmaps, counts, d_found, d_ovf = sharded_batched_mis_step(
+                dev_g, plans, starts, bitmaps, counts, tau_dev,
+                cfg=cfg, k=k, n=n, axis=axis, mesh=mesh)
+            sb_found += np.asarray(d_found, np.int64)
+            sb_ovf |= np.asarray(d_ovf, bool)
+            dispatches += 1
+        found[active] += sb_found[active]
+        ovf[active] |= sb_ovf[active]
+        blocks_run[active] += stop - next_block
+        next_block = stop
+        super_blocks += 1
+        state = SuperBlockState(
+            next_block=next_block, bitmaps=bitmaps, counts=counts,
+            found=found.copy(), overflowed=ovf.copy(),
+            blocks_run=blocks_run.copy(), super_blocks_run=super_blocks,
+            dispatches=dispatches)
+        yield state
+
+
+def distributed_batched_supports(
+    host_g: DataGraph,
+    patterns: Sequence[Pattern],
+    taus: Sequence[int],
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "workers",
+    match_cfg: Optional[MatchConfig] = None,
+    complete: bool = False,
+    blocks_per_super: Optional[int] = None,
+    state: Optional[SuperBlockState] = None,
+    return_state: bool = False,
+):
+    """mIS supports of a same-k candidate batch, mined across the whole mesh.
+
+    Returns (supports, found), each (P,) — or (supports, found, state) with
+    ``return_state=True``.  Per-pattern semantics match
+    `distributed_support`; the host early-exits the super-block loop once
+    every pattern has reached its τ (each pattern's ``count < τ`` guard
+    freezes its own state as soon as it individually finishes).  Drives
+    `iter_batched_supports` to completion; pass ``state=`` to continue a
+    snapshotted run.
+    """
+    last = state if state is not None else _init_super_block_state(
+        len(patterns), host_g.n)
+    for last in iter_batched_supports(
+            host_g, patterns, taus, mesh=mesh, axis=axis, match_cfg=match_cfg,
+            complete=complete, blocks_per_super=blocks_per_super, state=state):
+        pass
+    if return_state:
+        return last.supports(), last.found, last
+    return last.supports(), last.found
+
+
+def evaluate_level_distributed(
+    host_g: DataGraph,
+    patterns: Sequence[Pattern],
+    taus: Sequence[int],
+    cfg: MatchConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "workers",
+    complete: bool = False,
+    deadline: Optional[float] = None,
+    max_batch: int = batched_lib.DEFAULT_MAX_BATCH,
+    blocks_per_super: Optional[int] = None,
+    hooks=None,
+) -> Tuple[List[Optional["batched_lib.PatternOutcome"]], bool,
+           "batched_lib.LevelTelemetry"]:
+    """Evaluate a whole candidate level on the mesh (mIS/Luby semantics).
+
+    The distributed counterpart of `batched.evaluate_level_batched`: the
+    level is cut into the same deterministic (k, lo) groups, each group is
+    mined by `iter_batched_supports` (roots sharded × patterns batched), and
+    the same duck-typed ``hooks`` surface drives mid-level resume — here at
+    *super-block* granularity, with `SuperBlockState` as the carried unit.
+    Supports are bit-identical to the single-device ``mis_luby`` oracle;
+    found/overflowed/blocks_run are accounted at super-block granularity
+    (see `iter_batched_supports`).
+
+    Timeouts follow the all-or-nothing contract: the deadline is checked
+    between super-blocks, and an interrupted group reports ``None`` for
+    every pattern still in flight.
+    """
+    assert len(patterns) == len(taus)
+    mesh = mesh or mining_mesh(axis)
+    n = host_g.n
+    outcomes: List[Optional[batched_lib.PatternOutcome]] = [None] * len(patterns)
+    prefilled = hooks.resume_outcomes() if hooks is not None else None
+
+    timed_out = False
+    telemetry = batched_lib.LevelTelemetry()
+    if hooks is not None:
+        telemetry.dispatches = int(hooks.resume_dispatches())
+    for k, lo, idxs in batched_lib.level_groups(patterns, max_batch):
+        telemetry.state_bytes = max(
+            telemetry.state_bytes,
+            len(idxs) * (batched_lib._state_bytes("mis_luby", k, n)
+                         + transient_match_bytes(cfg, k)))
+        if prefilled is not None and all(i in prefilled for i in idxs):
+            for i in idxs:
+                outcomes[i] = prefilled[i]
+            continue
+        group_pats = [patterns[i] for i in idxs]
+        group_taus = [taus[i] for i in idxs]
+        state = hooks.group_resume(k, lo) if hooks is not None else None
+        group_timed_out = False
+        it = iter_batched_supports(
+            host_g, group_pats, group_taus, mesh=mesh, axis=axis,
+            match_cfg=cfg, complete=complete,
+            blocks_per_super=blocks_per_super, state=state)
+        last = state if state is not None else _init_super_block_state(
+            len(idxs), n)
+        while True:
+            if deadline is not None and time.monotonic() > deadline:
+                group_timed_out = True
+                break
+            try:
+                last = next(it)
+            except StopIteration:
+                break
+            if hooks is not None:
+                hooks.on_group_state(k, lo, last)
+        telemetry.dispatches += int(last.dispatches)
+        if group_timed_out:
+            timed_out = True
             break
-    return np.asarray(counts, np.int64), found_total
+        sups = last.supports()
+        got = [
+            batched_lib.PatternOutcome(
+                support=int(sups[j]),
+                frequent=bool(sups[j] >= group_taus[j]),
+                embeddings_found=int(last.found[j]),
+                overflowed=bool(last.overflowed[j]),
+                blocks_run=int(last.blocks_run[j]),
+            )
+            for j in range(len(idxs))
+        ]
+        for i, out in zip(idxs, got):
+            outcomes[i] = out
+        if hooks is not None:
+            hooks.on_group_done(k, lo, idxs, got, int(last.dispatches))
+    assert timed_out or all(o is not None for o in outcomes)
+    return outcomes, timed_out, telemetry
 
 
 def distributed_support(

@@ -27,12 +27,12 @@ from . import batched as batched_lib
 from . import mis as mis_lib
 from . import metrics as metrics_lib
 
-__all__ = ["MiningConfig", "PatternStats", "MiningResult", "tau_threshold", "mine",
-           "evaluate_pattern", "initial_candidates"]
+__all__ = ["MiningConfig", "MiningLoopState", "PatternStats", "MiningResult",
+           "tau_threshold", "mine", "evaluate_pattern", "initial_candidates"]
 
 _METRICS = ("mis", "mis_luby", "mni", "frac", "mis_exact")
 _GENERATION = ("merge", "edge_ext")
-_EXECUTION = ("batched", "sequential")
+_EXECUTION = ("batched", "sequential", "distributed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +47,19 @@ class MiningConfig:
     match: MatchConfig = dataclasses.field(default_factory=MatchConfig)
     # data plane: "batched" stacks each same-k candidate group of a level
     # into one vmapped device program; "sequential" is the paper's
-    # one-pattern-at-a-time loop, kept as the equivalence oracle.
+    # one-pattern-at-a-time loop, kept as the equivalence oracle;
+    # "distributed" shards match roots over every local device (shard_map,
+    # `core/distributed.py`) — Luby semantics, so metric must be mis_luby.
     # (mis_exact always takes the sequential path — its MIS solve is host-side.)
     execution: str = "batched"
     # ceiling on the pattern axis of one batched program (transient device
     # memory is O(batch · cap · chunk); bigger levels are sliced)
     batch_patterns: int = 64
+    # distributed plane only: logical super-block width in root blocks —
+    # fixes the early-exit/accounting schedule independent of the mesh
+    # shape, which is what lets a checkpointed run resume on a different
+    # device count bit-identically.  None = current device count (legacy).
+    blocks_per_super: Optional[int] = None
 
     def __post_init__(self):
         if self.metric not in _METRICS:
@@ -61,8 +68,14 @@ class MiningConfig:
             raise ValueError(f"generation must be one of {_GENERATION}")
         if self.execution not in _EXECUTION:
             raise ValueError(f"execution must be one of {_EXECUTION}")
+        if self.execution == "distributed" and self.metric != "mis_luby":
+            raise ValueError(
+                'execution="distributed" resolves mIS with globally-'
+                'synchronized Luby rounds; set metric="mis_luby"')
         if self.batch_patterns < 1:
             raise ValueError("batch_patterns must be >= 1")
+        if self.blocks_per_super is not None and self.blocks_per_super < 1:
+            raise ValueError("blocks_per_super must be >= 1 (or None)")
         if not (0.0 <= self.lam <= 1.0):
             raise ValueError("lambda (slider) must be in [0, 1]")
 
@@ -82,11 +95,37 @@ class PatternStats:
 class MiningResult:
     frequent: List[Tuple[Pattern, int]]
     searched: int                       # candidate patterns evaluated (Table 2)
-    per_level: Dict[int, Dict[str, int]]
+    # per level: candidates/searched/pruned/frequent counts plus telemetry —
+    # "dispatches" (device program invocations; deterministic, carried
+    # across a session resume) and "wall_s" (wall clock spent on the level
+    # *in this process*; excluded from resume bit-identity comparisons)
+    per_level: Dict[int, Dict[str, float]]
     stats: List[PatternStats]
     elapsed_s: float
     timed_out: bool
     peak_device_bytes: int
+
+
+@dataclasses.dataclass
+class MiningLoopState:
+    """The host loop's full carried state at a level boundary.
+
+    This is what the session runtime (`repro.runtime`) snapshots: handing a
+    `MiningLoopState` back to `mine()` via hooks resumes the loop exactly
+    where it stopped — ``cp`` is the candidate list of the *next* level
+    (empty once mining finished, which makes a resumed finished run a
+    no-op that just re-materializes the result).
+    """
+
+    level: int                          # levels already completed
+    cp: List[Pattern]                   # candidates of the next level
+    frequent: List[Tuple[Pattern, int]]
+    stats: List[PatternStats]
+    per_level: Dict[int, Dict[str, float]]
+    searched: int
+    peak_bytes: int
+    elapsed_s: float                    # wall time consumed up to the snapshot
+    timed_out: bool = False
 
 
 def tau_threshold(sigma: int, lam: float, n_vertices: int) -> int:
@@ -205,32 +244,77 @@ def _device_bytes(cfg: MiningConfig, k: int, n: int) -> int:
     return graphless
 
 
-def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
-    """Algorithm 1.  Returns all frequent patterns + the paper's telemetry."""
+def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
+    """Algorithm 1.  Returns all frequent patterns + the paper's telemetry.
+
+    ``hooks`` is the session runtime's resume surface (duck-typed; see
+    `repro.runtime.session.MiningSession`):
+
+      * ``hooks.loop_resume()`` → Optional[`MiningLoopState`] — restart the
+        loop from a level-boundary snapshot instead of from scratch;
+      * ``hooks.level_hooks(level)`` → Optional[object] — per-level hooks
+        handed to the level executor (mid-level / mid-pattern resume:
+        `batched.evaluate_level_batched` / `distributed
+        .evaluate_level_distributed` document the surface);
+      * ``hooks.on_level_end(MiningLoopState)`` — called at every level
+        boundary (and once more, with ``cp=[]``, when mining finishes) with
+        the full carried loop state.
+
+    A run resumed from any snapshot produces the same `MiningResult` as the
+    uninterrupted run, except wall-clock fields (``elapsed_s``, per-level
+    ``wall_s``).
+    """
     t0 = time.monotonic()
     dev_g = DeviceGraph.from_host(g)
     graph_bytes = g.nbytes()
-    frequent: List[Tuple[Pattern, int]] = []
-    all_stats: List[PatternStats] = []
-    per_level: Dict[int, Dict[str, int]] = {}
-    searched = 0
-    peak_bytes = graph_bytes
-    timed_out = False
 
-    cp = initial_candidates(g)
+    resume = hooks.loop_resume() if hooks is not None else None
+    if resume is None:
+        frequent: List[Tuple[Pattern, int]] = []
+        all_stats: List[PatternStats] = []
+        per_level: Dict[int, Dict[str, float]] = {}
+        searched = 0
+        peak_bytes = graph_bytes
+        timed_out = False
+        cp = initial_candidates(g)
+        level = 0
+        elapsed0 = 0.0
+    else:
+        frequent = list(resume.frequent)
+        all_stats = list(resume.stats)
+        per_level = dict(resume.per_level)
+        searched = resume.searched
+        peak_bytes = max(graph_bytes, resume.peak_bytes)
+        timed_out = resume.timed_out
+        cp = list(resume.cp)
+        level = resume.level
+        elapsed0 = resume.elapsed_s
+
     label_universe = sorted(set(g.labels.tolist()))
-    searched_keys: set = set()
+    searched_keys = {canonical_key(st.pattern) for st in all_stats}
     mis_mode = cfg.metric in ("mis", "mis_luby", "mis_exact")
-    level = 0
 
     use_batched = cfg.execution == "batched" and cfg.metric != "mis_exact"
-    deadline = None if cfg.time_limit_s is None else t0 + cfg.time_limit_s
+    use_distributed = cfg.execution == "distributed"
+    deadline = (None if cfg.time_limit_s is None
+                else t0 + max(cfg.time_limit_s - elapsed0, 0.0))
+
+    def loop_state(next_cp: List[Pattern]) -> MiningLoopState:
+        return MiningLoopState(
+            level=level, cp=list(next_cp), frequent=list(frequent),
+            stats=list(all_stats), per_level=dict(per_level),
+            searched=searched, peak_bytes=peak_bytes,
+            elapsed_s=elapsed0 + (time.monotonic() - t0),
+            timed_out=timed_out)
 
     while cp:
         level += 1
+        level_t0 = time.monotonic()
+        level_hooks = hooks.level_hooks(level) if hooks is not None else None
         level_frequent: List[Pattern] = []
         lvl_searched = 0
         lvl_pruned = 0
+        lvl_dispatches = 0
         eval_pats: List[Pattern] = []
         eval_taus: List[int] = []
         for pat in cp:
@@ -245,13 +329,23 @@ def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
             eval_pats.append(pat)
             eval_taus.append(tau)
 
-        if use_batched and eval_pats:
-            outcomes, lvl_timed_out, state_bytes = batched_lib.evaluate_level_batched(
-                g, dev_g, eval_pats, eval_taus, cfg.metric, cfg.match,
-                complete=cfg.complete, deadline=deadline,
-                max_batch=cfg.batch_patterns)
+        if (use_batched or use_distributed) and eval_pats:
+            if use_distributed:
+                from . import distributed as distributed_lib
+
+                outcomes, lvl_timed_out, tel = distributed_lib.evaluate_level_distributed(
+                    g, eval_pats, eval_taus, cfg.match,
+                    complete=cfg.complete, deadline=deadline,
+                    max_batch=cfg.batch_patterns,
+                    blocks_per_super=cfg.blocks_per_super, hooks=level_hooks)
+            else:
+                outcomes, lvl_timed_out, tel = batched_lib.evaluate_level_batched(
+                    g, dev_g, eval_pats, eval_taus, cfg.metric, cfg.match,
+                    complete=cfg.complete, deadline=deadline,
+                    max_batch=cfg.batch_patterns, hooks=level_hooks)
             timed_out |= lvl_timed_out
-            peak_bytes = max(peak_bytes, graph_bytes + state_bytes)
+            lvl_dispatches += tel.dispatches
+            peak_bytes = max(peak_bytes, graph_bytes + tel.state_bytes)
             for pat, tau, out in zip(eval_pats, eval_taus, outcomes):
                 if out is None:  # level timed out before this group ran
                     continue
@@ -278,6 +372,7 @@ def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
                 st = evaluate_pattern(g, dev_g, pat, tau, cfg)
                 searched += 1
                 lvl_searched += 1
+                lvl_dispatches += st.blocks_run
                 all_stats.append(st)
                 peak_bytes = max(peak_bytes, graph_bytes + _device_bytes(cfg, pat.k, g.n))
                 if st.frequent:
@@ -288,32 +383,39 @@ def mine(g: DataGraph, cfg: MiningConfig) -> MiningResult:
             "searched": lvl_searched,
             "pruned": lvl_pruned,
             "frequent": len(level_frequent),
+            "dispatches": lvl_dispatches,
+            "wall_s": time.monotonic() - level_t0,
         }
         if timed_out or not level_frequent:
-            break
-        if cfg.generation == "merge":
+            cp = []
+        elif (cfg.generation == "merge"
+              and level_frequent[0].k + 1 > cfg.max_pattern_size):
             # merge keeps strict level-wise (k−1 → k) discipline
-            if level_frequent[0].k + 1 > cfg.max_pattern_size:
-                break
-            cp = generate_new_patterns(level_frequent)
+            cp = []
         else:
-            # edge extension mixes vertex counts (that is the paper's point:
-            # same-vertex-count patterns land at different BFS levels)
-            cp = edge_extension_candidates(
-                level_frequent, label_universe, max_k=cfg.max_pattern_size
-            )
-        searched_keys |= {canonical_key(st.pattern) for st in all_stats}
-        cp = [
-            p for p in cp
-            if p.k <= cfg.max_pattern_size and canonical_key(p) not in searched_keys
-        ]
+            if cfg.generation == "merge":
+                cp = generate_new_patterns(level_frequent)
+            else:
+                # edge extension mixes vertex counts (that is the paper's
+                # point: same-vertex-count patterns land at different BFS
+                # levels)
+                cp = edge_extension_candidates(
+                    level_frequent, label_universe, max_k=cfg.max_pattern_size
+                )
+            searched_keys |= {canonical_key(st.pattern) for st in all_stats}
+            cp = [
+                p for p in cp
+                if p.k <= cfg.max_pattern_size and canonical_key(p) not in searched_keys
+            ]
+        if hooks is not None:
+            hooks.on_level_end(loop_state(cp))
 
     return MiningResult(
         frequent=frequent,
         searched=searched,
         per_level=per_level,
         stats=all_stats,
-        elapsed_s=time.monotonic() - t0,
+        elapsed_s=elapsed0 + (time.monotonic() - t0),
         timed_out=timed_out,
         peak_device_bytes=peak_bytes,
     )

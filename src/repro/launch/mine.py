@@ -5,8 +5,12 @@
 
 Loads (synthesizes) a dataset, mines frequent subgraphs with the configured
 metric/generation strategy, prints the paper's telemetry (per-level counts,
-searched patterns, memory, time), optionally distributing match roots over
-every local device (`--distributed`).
+searched patterns, memory, time).  ``--execution distributed`` shards match
+roots over every local device; ``--checkpoint-dir`` makes the run a
+resumable *session* (`repro.runtime`) that snapshots the full mining state
+at level-boundary and block/super-block granularity, and ``--resume``
+continues one after a kill — on the same or a different device count —
+with a bit-identical result.
 """
 from __future__ import annotations
 
@@ -33,10 +37,12 @@ def main(argv=None) -> int:
     ap.add_argument("--generation", default="merge",
                     choices=["merge", "edge_ext"])
     ap.add_argument("--execution", default="batched",
-                    choices=["batched", "sequential"],
+                    choices=["batched", "sequential", "distributed"],
                     help="data plane: one vmapped program per same-k "
-                         "candidate group (batched, default) or the paper's "
-                         "per-pattern loop (sequential oracle)")
+                         "candidate group (batched, default), the paper's "
+                         "per-pattern loop (sequential oracle), or match "
+                         "roots sharded over every local device "
+                         "(distributed; forces metric=mis_luby)")
     ap.add_argument("--expansion", default="xla",
                     choices=["xla", "pallas"],
                     help="expansion plane inside match_block: per-chunk XLA "
@@ -57,7 +63,27 @@ def main(argv=None) -> int:
     ap.add_argument("--cap", type=int, default=16384)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write result JSON here")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="run as a resumable session: snapshot the full "
+                         "mining state into this directory (atomic "
+                         "manifest/COMMIT protocol, see repro.runtime)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="snapshot cadence in carried-state updates (root "
+                         "blocks on the batched plane, super-blocks on the "
+                         "distributed plane); 0 = level boundaries only")
+    ap.add_argument("--resume", action="store_true",
+                    help="require a committed snapshot in --checkpoint-dir "
+                         "and continue it (without this flag a snapshot is "
+                         "still picked up when present; --resume makes a "
+                         "missing one an error instead of a fresh start)")
     args = ap.parse_args(argv)
+
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    if args.execution == "distributed" and args.metric != "mis_luby":
+        print(f"[mine] execution=distributed forces metric=mis_luby "
+              f"(was {args.metric})")
+        args.metric = "mis_luby"
 
     t0 = time.monotonic()
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
@@ -79,7 +105,20 @@ def main(argv=None) -> int:
             MatchConfig.for_graph(g, cap=args.cap, expansion=args.expansion),
             pallas_interpret=interpret),
     )
-    res = mine(g, cfg)
+    if args.checkpoint_dir:
+        from repro.runtime import MiningSession
+
+        session = MiningSession(
+            g, cfg, args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            resume="must" if args.resume else "auto",
+            meta={"dataset": args.dataset, "scale": args.scale,
+                  "seed": args.seed})
+        res = session.run()
+        print(f"[mine] session: {session.snapshots_written} snapshots "
+              f"written under {args.checkpoint_dir}")
+    else:
+        res = mine(g, cfg)
 
     print(f"[mine] done in {res.elapsed_s:.2f}s"
           f"{' (TIMED OUT)' if res.timed_out else ''}")
@@ -87,7 +126,9 @@ def main(argv=None) -> int:
           f"searched: {res.searched}  peak device bytes: "
           f"{res.peak_device_bytes / 2**20:.1f} MiB")
     for lvl, st in res.per_level.items():
-        print(f"[mine]   level {lvl}: {st}")
+        pretty = {k: (round(v, 3) if isinstance(v, float) else v)
+                  for k, v in st.items()}
+        print(f"[mine]   level {lvl}: {pretty}")
     for pat, sup in res.frequent[:10]:
         tau = tau_threshold(args.sigma, args.lam, pat.k)
         print(f"[mine]   k={pat.k} sup={sup} (tau={tau}) "
@@ -103,10 +144,16 @@ def main(argv=None) -> int:
             "elapsed_s": res.elapsed_s, "timed_out": res.timed_out,
             "n_frequent": len(res.frequent), "searched": res.searched,
             "peak_device_bytes": res.peak_device_bytes,
+            "dispatches": sum(int(v.get("dispatches", 0))
+                              for v in res.per_level.values()),
             "per_level": {str(k): v for k, v in res.per_level.items()},
+            # deterministic digest of the mined set: (k, support) pairs in
+            # result order — what the CI resume-smoke diffs against an
+            # uninterrupted run
+            "frequent": [[p.k, int(s)] for p, s in res.frequent],
         }
         with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
+            json.dump(out, f, indent=2, sort_keys=True)
     return 0
 
 

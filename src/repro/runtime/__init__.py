@@ -1,0 +1,30 @@
+"""Resumable elastic mining runtime.
+
+Checkpointed mining sessions over `repro.core.flexis.mine`: atomic
+snapshots of the full mining state (pattern frontier + host bookkeeping +
+in-flight device metric state) at level-boundary and root-block /
+super-block granularity, with mesh-shape-agnostic restore.  See
+`docs/architecture.md` ("Sessions and resume") for the dataflow.
+"""
+from .session import DEFAULT_BLOCKS_PER_SUPER, MiningSession
+from .state import (
+    GroupDone,
+    LevelCursor,
+    SessionState,
+    decode_session,
+    encode_session,
+)
+from .resume import (
+    SessionMismatch,
+    latest_snapshot,
+    load_session,
+    session_fingerprint,
+)
+
+__all__ = [
+    "MiningSession", "DEFAULT_BLOCKS_PER_SUPER",
+    "SessionState", "LevelCursor", "GroupDone",
+    "encode_session", "decode_session",
+    "load_session", "latest_snapshot", "session_fingerprint",
+    "SessionMismatch",
+]

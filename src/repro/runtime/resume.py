@@ -1,0 +1,106 @@
+"""Snapshot loading + validation for mining sessions.
+
+Split from `session.py` so a restore can be driven standalone (inspect a
+checkpoint directory, validate it against a config, rebuild the
+`SessionState`) without constructing a `MiningSession`.
+
+Mesh-shape-agnostic restore: the snapshot's array leaves were written as
+full logical arrays (`train/checkpoint.py` guarantees this), and shapes
+are read back from the checkpoint *manifest* — not from a caller-supplied
+template — so the loader needs no advance knowledge of bucket sizes or
+pattern counts.  Device placement happens lazily: the mining loop hands
+the restored host arrays straight back to jit/`shard_map`
+(`jnp.asarray` / implicit `device_put` under the current mesh), which is
+where a 4-device snapshot becomes an 8- or 1-device resident without any
+format change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.flexis import MiningConfig
+from repro.core.graph import DataGraph
+from repro.train import checkpoint as ckpt
+
+from .state import SessionState, decode_session
+
+__all__ = ["session_fingerprint", "latest_snapshot", "load_session",
+           "SessionMismatch"]
+
+
+class SessionMismatch(ValueError):
+    """A snapshot exists but was written by an incompatible run."""
+
+
+def session_fingerprint(g: DataGraph, cfg: MiningConfig) -> Dict[str, Any]:
+    """Identity of a mining run: the graph (structure + labels) and every
+    result-relevant config knob.  Wall-clock budget (``time_limit_s``) is
+    deliberately excluded — a *killed* run may legitimately be resumed
+    under a bigger budget without changing any mined value.  (A run that
+    ran to its timeout is *finished*: per the paper's timeout semantics it
+    reports the truncated result, its final snapshot carries an empty
+    candidate list, and resuming it re-materializes that result rather
+    than mining further.)"""
+    cfg_d = dataclasses.asdict(cfg)
+    cfg_d.pop("time_limit_s", None)
+    return {
+        "graph": {
+            "n": int(g.n),
+            "n_edges": int(g.n_edges),
+            "n_labels": int(g.n_labels),
+            "labels_crc": zlib.crc32(np.ascontiguousarray(g.labels)),
+            "edges_crc": zlib.crc32(np.ascontiguousarray(g.edge_keys)),
+        },
+        "config": cfg_d,
+    }
+
+
+def latest_snapshot(checkpoint_dir) -> Optional[int]:
+    """Step index of the newest committed session snapshot, or None."""
+    return ckpt.latest_step(Path(checkpoint_dir))
+
+
+def _manifest(checkpoint_dir: Path, step: int) -> Dict[str, Any]:
+    d = Path(checkpoint_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())
+
+
+def load_session(checkpoint_dir, cfg: MiningConfig, *,
+                 step: Optional[int] = None,
+                 fingerprint: Optional[Dict[str, Any]] = None,
+                 ) -> Optional[Tuple[SessionState, int]]:
+    """Load (SessionState, step) from the newest committed snapshot.
+
+    Returns None when the directory holds no committed snapshot.  When
+    ``fingerprint`` is given (see `session_fingerprint`), a stored
+    snapshot whose identity differs raises `SessionMismatch` — resuming
+    someone else's checkpoint silently would *look* like a successful
+    resume and mine garbage.
+    """
+    checkpoint_dir = Path(checkpoint_dir)
+    if step is None:
+        step = latest_snapshot(checkpoint_dir)
+        if step is None:
+            return None
+    manifest = _manifest(checkpoint_dir, step)
+    # rebuild the leaf template from the manifest itself: logical shapes
+    # are authoritative there, which is what makes the restore mesh-free
+    template = [
+        jax.ShapeDtypeStruct(tuple(leaf["shape"]), np.dtype(leaf["dtype"]))
+        for leaf in manifest["leaves"]
+    ]
+    leaves, extra, step = ckpt.restore(checkpoint_dir, template, step=step)
+    stored = extra.get("fingerprint")
+    if fingerprint is not None and stored != fingerprint:
+        raise SessionMismatch(
+            f"snapshot under {checkpoint_dir} was written by a different "
+            f"run:\n  stored:  {stored}\n  current: {fingerprint}")
+    leaves = [np.asarray(leaf) for leaf in leaves]
+    return decode_session(leaves, extra, cfg.metric), step

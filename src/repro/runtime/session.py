@@ -1,0 +1,250 @@
+"""Checkpointed mining sessions — the preemption-safe `mine()` driver.
+
+A `MiningSession` wraps `repro.core.flexis.mine` with the level-boundary
+and mid-level hooks the core exposes, and persists the full mining state
+through `repro.train.checkpoint`'s atomic manifest/COMMIT protocol:
+
+  * at **every level boundary** the whole loop state (frontier, stats,
+    candidates of the next level, τ/telemetry bookkeeping) is snapshotted;
+  * **inside a level**, the carried state of the in-flight pattern group
+    is snapshotted every ``checkpoint_every`` state updates — one update
+    per root block on the batched plane, one per logical super-block on
+    the distributed plane — so a kill mid-pattern loses at most
+    ``checkpoint_every`` blocks of device work;
+  * device-side metric state (mIS bitmaps/counters, MNI/frac tables) is
+    saved as full logical arrays, so a resumed session may run on a
+    different device count/mesh shape than the one that wrote the
+    snapshot (re-sharding happens on load); the distributed plane's
+    logical super-block schedule (`MiningConfig.blocks_per_super`, pinned
+    by the session) keeps its accounting mesh-invariant too.
+
+Resume contract: ``MiningSession(...).run()`` on a directory holding a
+snapshot continues the run and returns a `MiningResult` identical to the
+uninterrupted run's, except wall-clock fields (``elapsed_s``, per-level
+``wall_s``).  A crash *during* a save never corrupts the previous
+snapshot (that is `train/checkpoint.py`'s COMMIT guarantee), so the worst
+case is re-doing work since the last committed snapshot — never wrong
+results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.batched import GroupState, PatternOutcome
+from repro.core.distributed import SuperBlockState
+from repro.core.flexis import (
+    MiningConfig, MiningLoopState, MiningResult, initial_candidates, mine,
+)
+from repro.core.graph import DataGraph
+from repro.train import checkpoint as ckpt
+
+from .state import GroupDone, LevelCursor, SessionState, encode_session
+from .resume import load_session, session_fingerprint
+
+__all__ = ["MiningSession", "DEFAULT_BLOCKS_PER_SUPER"]
+
+# distributed-plane sessions pin the logical super-block width so the
+# schedule (and with it every accounting field) survives a mesh reshape;
+# 8 root blocks keeps ≤8-device meshes fully busy per super-block while
+# bounding the work lost to a mid-super-block kill
+DEFAULT_BLOCKS_PER_SUPER = 8
+
+
+class _LevelRecorder:
+    """Per-level hooks object handed to the level executors.
+
+    Implements the duck-typed surface `evaluate_level_batched` /
+    `evaluate_level_distributed` document: replays completed groups from
+    the resume cursor, hands the in-flight group its carried state, and
+    records every state update back into the session for snapshotting.
+    """
+
+    def __init__(self, session: "MiningSession", level: int,
+                 resume_cursor: Optional[LevelCursor]):
+        self._session = session
+        self.level = level
+        self.groups_done: List[GroupDone] = (
+            list(resume_cursor.groups_done) if resume_cursor else [])
+        self._resume = resume_cursor
+        self.inflight_key: Optional[Tuple[int, int]] = None
+        self.inflight_group: Optional[GroupState] = None
+        self.inflight_super: Optional[SuperBlockState] = None
+
+    # -- resume side --------------------------------------------------------
+    def resume_outcomes(self) -> Optional[Dict[int, PatternOutcome]]:
+        if not self.groups_done:
+            return None
+        return {i: o for gd in self.groups_done
+                for i, o in zip(gd.idxs, gd.outcomes)}
+
+    def resume_dispatches(self) -> int:
+        return sum(gd.dispatches for gd in self.groups_done)
+
+    def group_resume(self, k: int, lo: int):
+        if self._resume is None or self._resume.inflight_key != (k, lo):
+            return None
+        return (self._resume.inflight_group
+                if self._resume.inflight_group is not None
+                else self._resume.inflight_super)
+
+    # -- record side --------------------------------------------------------
+    def on_group_state(self, k: int, lo: int, state) -> None:
+        self.inflight_key = (k, lo)
+        if isinstance(state, SuperBlockState):
+            self.inflight_super, self.inflight_group = state, None
+        else:
+            self.inflight_group, self.inflight_super = state, None
+        self._session._on_state_update()
+
+    def on_group_done(self, k: int, lo: int, idxs, outcomes,
+                      dispatches: int) -> None:
+        self.groups_done.append(GroupDone(
+            k=k, lo=lo, idxs=list(idxs), outcomes=list(outcomes),
+            dispatches=dispatches))
+        self.inflight_key = None
+        self.inflight_group = None
+        self.inflight_super = None
+
+    def cursor(self) -> LevelCursor:
+        return LevelCursor(
+            level=self.level,
+            groups_done=list(self.groups_done),
+            inflight_key=self.inflight_key,
+            inflight_group=self.inflight_group,
+            inflight_super=self.inflight_super,
+        )
+
+
+class _SessionHooks:
+    """The `mine()`-facing hooks surface (see `flexis.mine`)."""
+
+    def __init__(self, session: "MiningSession",
+                 resume_state: Optional[SessionState]):
+        self._session = session
+        self._resume = resume_state
+
+    def loop_resume(self) -> Optional[MiningLoopState]:
+        return self._resume.loop if self._resume is not None else None
+
+    def level_hooks(self, level: int) -> _LevelRecorder:
+        cursor = None
+        if (self._resume is not None and self._resume.cursor is not None
+                and self._resume.cursor.level == level):
+            cursor = self._resume.cursor
+        rec = _LevelRecorder(self._session, level, cursor)
+        self._session._recorder = rec
+        return rec
+
+    def on_level_end(self, loop: MiningLoopState) -> None:
+        self._session._on_level_end(loop)
+
+
+class MiningSession:
+    """A resumable mining run bound to a checkpoint directory.
+
+    Args:
+      g: the data graph (must be byte-identical across resumes — validated
+        via a fingerprint stored in every snapshot).
+      cfg: `MiningConfig`; on the distributed plane an unset
+        ``blocks_per_super`` is pinned to `DEFAULT_BLOCKS_PER_SUPER`.
+      checkpoint_dir: snapshot root (one `train/checkpoint.py` step per
+        snapshot).
+      checkpoint_every: snapshot cadence in carried-state updates (root
+        blocks / super-blocks); level boundaries always snapshot.
+        ``0`` disables mid-level snapshots (boundaries only).
+      keep_last: retention, forwarded to `checkpoint.save`.
+      resume: ``"auto"`` (continue a snapshot when one exists),
+        ``"never"`` (ignore snapshots; fresh run), or ``"must"`` (raise
+        unless a snapshot exists).
+      meta: optional JSON-serializable dict stored in every snapshot
+        (dataset provenance etc.; not validated on resume).
+    """
+
+    def __init__(self, g: DataGraph, cfg: MiningConfig,
+                 checkpoint_dir, *, checkpoint_every: int = 1,
+                 keep_last: int = 3, resume: str = "auto",
+                 meta: Optional[dict] = None):
+        if resume not in ("auto", "never", "must"):
+            raise ValueError('resume must be "auto", "never" or "must"')
+        if checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if cfg.execution == "distributed" and cfg.blocks_per_super is None:
+            cfg = dataclasses.replace(
+                cfg, blocks_per_super=DEFAULT_BLOCKS_PER_SUPER)
+        self.g = g
+        self.cfg = cfg
+        self.dir = Path(checkpoint_dir)
+        self.checkpoint_every = int(checkpoint_every)
+        self.keep_last = keep_last
+        self.meta = meta or {}
+        self._resume_mode = resume
+        self._fingerprint = session_fingerprint(g, cfg)
+
+        self._step = -1                 # last written snapshot step
+        self._updates = 0               # state updates since last snapshot
+        self._recorder: Optional[_LevelRecorder] = None
+        self._boundary: Optional[MiningLoopState] = None
+        self._t0 = 0.0
+        self._elapsed0 = 0.0
+        self.snapshots_written = 0
+
+    # -- persistence --------------------------------------------------------
+    def _elapsed(self) -> float:
+        return self._elapsed0 + (time.monotonic() - self._t0)
+
+    def _save(self, state: SessionState) -> None:
+        leaves, extra = encode_session(state, self.cfg.metric)
+        extra["fingerprint"] = self._fingerprint
+        extra["meta"] = self.meta
+        self._step += 1
+        ckpt.save(self.dir, self._step, leaves, extra=extra,
+                  keep_last=self.keep_last)
+        self.snapshots_written += 1
+        self._updates = 0
+
+    def _on_state_update(self) -> None:
+        """Called by the recorder after every carried-state update."""
+        if self.checkpoint_every == 0:
+            return
+        self._updates += 1
+        if self._updates < self.checkpoint_every:
+            return
+        boundary = self._boundary
+        assert boundary is not None and self._recorder is not None
+        loop = dataclasses.replace(boundary, elapsed_s=self._elapsed())
+        self._save(SessionState(loop=loop, cursor=self._recorder.cursor()))
+
+    def _on_level_end(self, loop: MiningLoopState) -> None:
+        self._boundary = loop
+        self._recorder = None
+        self._save(SessionState(loop=loop))
+
+    # -- driver -------------------------------------------------------------
+    def run(self) -> MiningResult:
+        """Mine (or continue mining) and return the `MiningResult`."""
+        resume_state: Optional[SessionState] = None
+        if self._resume_mode != "never":
+            loaded = load_session(self.dir, self.cfg,
+                                  fingerprint=self._fingerprint)
+            if loaded is None and self._resume_mode == "must":
+                raise FileNotFoundError(
+                    f"resume='must' but no committed session snapshot "
+                    f"under {self.dir}")
+            if loaded is not None:
+                resume_state, self._step = loaded
+        if resume_state is not None:
+            self._elapsed0 = resume_state.loop.elapsed_s
+            self._boundary = resume_state.loop
+        else:
+            # synthesize the level-0 boundary so a kill inside the very
+            # first level still has a base snapshot to hang its cursor on
+            self._boundary = MiningLoopState(
+                level=0, cp=initial_candidates(self.g), frequent=[],
+                stats=[], per_level={}, searched=0,
+                peak_bytes=self.g.nbytes(), elapsed_s=0.0)
+        self._t0 = time.monotonic()
+        hooks = _SessionHooks(self, resume_state)
+        return mine(self.g, self.cfg, hooks=hooks)

@@ -1,0 +1,302 @@
+"""Session-state codec — the mining loop's full state as (pytree, extra).
+
+A mining session snapshot has two halves, mirroring what
+`train/checkpoint.py` can carry:
+
+  * the **pytree**: the device-side metric state of the in-flight group —
+    mIS bitmaps/counters (batched `GroupState` or distributed
+    `SuperBlockState`), MNI image tables, fractional count tables — saved
+    as *full logical arrays*, so a restore can re-shard onto any mesh;
+  * the **extra** manifest slot: every host-side value — the per-level
+    frequent-pattern frontier (patterns + `PatternStats`), the candidate
+    list of the next level, τ/accounting bookkeeping, and the
+    level/pattern-group/block cursor — encoded as plain JSON.
+
+`encode_session` / `decode_session` are exact inverses for every field
+that participates in the resume bit-identity contract (wall-clock floats
+round-trip through JSON unchanged — Python floats are IEEE doubles both
+sides).  The pytree is a flat *list* of arrays; ``extra["pytree"]``
+records how many leaves the in-flight state owns and the metric decides
+their structure, which is what lets `resume.load_session` rebuild the
+tree without knowing shapes up front (shapes live in the checkpoint
+manifest).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batched import GroupState, PatternOutcome
+from repro.core.distributed import SuperBlockState
+from repro.core.flexis import MiningLoopState, PatternStats
+from repro.core.pattern import Pattern
+
+__all__ = [
+    "FORMAT", "GroupDone", "LevelCursor", "SessionState",
+    "encode_session", "decode_session",
+    "encode_pattern", "decode_pattern",
+]
+
+FORMAT = 1
+
+
+# ---------------------------------------------------------------------------
+# host-object codecs (JSON-dict ⟷ dataclass)
+# ---------------------------------------------------------------------------
+
+def encode_pattern(p: Pattern) -> Dict[str, Any]:
+    return {"labels": p.labels.tolist(), "edges": p.edges()}
+
+
+def decode_pattern(d: Dict[str, Any]) -> Pattern:
+    labels = np.asarray(d["labels"], np.int32)
+    adj = np.zeros((labels.shape[0], labels.shape[0]), bool)
+    for i, j in d["edges"]:
+        adj[i, j] = True
+    return Pattern(adj, labels)
+
+
+def _encode_stats(st: PatternStats) -> Dict[str, Any]:
+    return {
+        "pattern": encode_pattern(st.pattern),
+        "support": int(st.support),
+        "tau": int(st.tau),
+        "frequent": bool(st.frequent),
+        "embeddings_found": int(st.embeddings_found),
+        "overflowed": bool(st.overflowed),
+        "blocks_run": int(st.blocks_run),
+    }
+
+
+def _decode_stats(d: Dict[str, Any]) -> PatternStats:
+    return PatternStats(
+        pattern=decode_pattern(d["pattern"]),
+        support=d["support"],
+        tau=d["tau"],
+        frequent=d["frequent"],
+        embeddings_found=d["embeddings_found"],
+        overflowed=d["overflowed"],
+        blocks_run=d["blocks_run"],
+    )
+
+
+def _encode_outcome(o: PatternOutcome) -> Dict[str, Any]:
+    return {
+        "support": int(o.support),
+        "frequent": bool(o.frequent),
+        "embeddings_found": int(o.embeddings_found),
+        "overflowed": bool(o.overflowed),
+        "blocks_run": int(o.blocks_run),
+    }
+
+
+def _decode_outcome(d: Dict[str, Any]) -> PatternOutcome:
+    return PatternOutcome(**d)
+
+
+def _encode_loop(loop: MiningLoopState) -> Dict[str, Any]:
+    return {
+        "level": loop.level,
+        "cp": [encode_pattern(p) for p in loop.cp],
+        "frequent": [
+            {"pattern": encode_pattern(p), "support": int(s)}
+            for p, s in loop.frequent
+        ],
+        "stats": [_encode_stats(st) for st in loop.stats],
+        "per_level": {str(k): v for k, v in loop.per_level.items()},
+        "searched": loop.searched,
+        "peak_bytes": loop.peak_bytes,
+        "elapsed_s": loop.elapsed_s,
+        "timed_out": loop.timed_out,
+    }
+
+
+def _decode_loop(d: Dict[str, Any]) -> MiningLoopState:
+    return MiningLoopState(
+        level=d["level"],
+        cp=[decode_pattern(p) for p in d["cp"]],
+        frequent=[(decode_pattern(f["pattern"]), f["support"])
+                  for f in d["frequent"]],
+        stats=[_decode_stats(st) for st in d["stats"]],
+        per_level={int(k): v for k, v in d["per_level"].items()},
+        searched=d["searched"],
+        peak_bytes=d["peak_bytes"],
+        elapsed_s=d["elapsed_s"],
+        timed_out=d["timed_out"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# session state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GroupDone:
+    """One completed (k, lo) group of the in-flight level."""
+
+    k: int
+    lo: int
+    idxs: List[int]                     # level eval-set indices
+    outcomes: List[PatternOutcome]
+    dispatches: int
+
+
+@dataclasses.dataclass
+class LevelCursor:
+    """Mid-level resume state: which groups of the in-flight level finished
+    and the carried state of the one that was running when we snapshotted."""
+
+    level: int
+    groups_done: List[GroupDone]
+    inflight_key: Optional[Tuple[int, int]] = None       # (k, lo)
+    # exactly one of these, matching the execution plane:
+    inflight_group: Optional[GroupState] = None          # batched
+    inflight_super: Optional[SuperBlockState] = None     # distributed
+
+
+@dataclasses.dataclass
+class SessionState:
+    """A full mining-session snapshot: the last level-boundary loop state
+    plus (optionally) the cursor into the level running past it."""
+
+    loop: MiningLoopState
+    cursor: Optional[LevelCursor] = None
+
+
+# ---------------------------------------------------------------------------
+# (pytree, extra) codec
+# ---------------------------------------------------------------------------
+
+def _mis_state(metric: str) -> bool:
+    return metric in ("mis", "mis_luby")
+
+
+def encode_session(state: SessionState, metric: str,
+                   ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+    """Flatten a `SessionState` into (array leaves, JSON extra).
+
+    The leaves are the in-flight device state as logical host arrays (empty
+    when the snapshot sits exactly on a level boundary); everything else
+    goes into ``extra``.  ``extra["cursor"]`` is the compact
+    level/pattern-group/block index `train/checkpoint.py` documents as the
+    resumable-cursor slot.
+    """
+    leaves: List[np.ndarray] = []
+    extra: Dict[str, Any] = {
+        "format": FORMAT,
+        "loop": _encode_loop(state.loop),
+        "cursor": {"level": state.loop.level, "group": None, "block": None},
+    }
+    if state.cursor is None:
+        extra["pytree"] = {"kind": "none", "n_leaves": 0}
+        return leaves, extra
+
+    cur = state.cursor
+    c: Dict[str, Any] = {
+        "level": cur.level,
+        "groups_done": [
+            {
+                "k": gd.k, "lo": gd.lo, "idxs": list(map(int, gd.idxs)),
+                "outcomes": [_encode_outcome(o) for o in gd.outcomes],
+                "dispatches": gd.dispatches,
+            }
+            for gd in cur.groups_done
+        ],
+        "inflight_key": (list(cur.inflight_key)
+                         if cur.inflight_key is not None else None),
+    }
+    extra["cursor"]["level"] = cur.level
+    if cur.inflight_group is not None:
+        gs = cur.inflight_group
+        devstate = gs.state if _mis_state(metric) else (gs.state,)
+        leaves = [np.asarray(leaf) for leaf in devstate]
+        c["inflight"] = {
+            "plane": "batched",
+            "next_block": int(gs.next_block),
+            "bucket_map": np.asarray(gs.bucket_map).tolist(),
+            "supports": gs.supports.tolist(),
+            "found": gs.found.tolist(),
+            "overflowed": gs.overflowed.tolist(),
+            "blocks_run": gs.blocks_run.tolist(),
+            "dispatches": int(gs.dispatches),
+        }
+        extra["cursor"]["group"] = list(cur.inflight_key)
+        extra["cursor"]["block"] = int(gs.next_block)
+    elif cur.inflight_super is not None:
+        ss = cur.inflight_super
+        leaves = [np.asarray(ss.bitmaps), np.asarray(ss.counts)]
+        c["inflight"] = {
+            "plane": "distributed",
+            "next_block": int(ss.next_block),
+            "found": ss.found.tolist(),
+            "overflowed": ss.overflowed.tolist(),
+            "blocks_run": ss.blocks_run.tolist(),
+            "super_blocks_run": int(ss.super_blocks_run),
+            "dispatches": int(ss.dispatches),
+        }
+        extra["cursor"]["group"] = list(cur.inflight_key)
+        extra["cursor"]["block"] = int(ss.next_block)
+    else:
+        c["inflight"] = None
+    extra["level_cursor"] = c
+    extra["pytree"] = {"kind": ("mis" if _mis_state(metric) else metric)
+                       if leaves else "none",
+                       "n_leaves": len(leaves)}
+    return leaves, extra
+
+
+def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
+                   metric: str) -> SessionState:
+    """Inverse of `encode_session` (leaves come back as logical arrays)."""
+    if extra.get("format") != FORMAT:
+        raise ValueError(
+            f"unknown session snapshot format {extra.get('format')!r} "
+            f"(this build reads format {FORMAT})")
+    loop = _decode_loop(extra["loop"])
+    c = extra.get("level_cursor")
+    if c is None:
+        return SessionState(loop=loop)
+
+    cursor = LevelCursor(
+        level=c["level"],
+        groups_done=[
+            GroupDone(
+                k=gd["k"], lo=gd["lo"], idxs=list(gd["idxs"]),
+                outcomes=[_decode_outcome(o) for o in gd["outcomes"]],
+                dispatches=gd["dispatches"],
+            )
+            for gd in c["groups_done"]
+        ],
+        inflight_key=(tuple(c["inflight_key"])
+                      if c["inflight_key"] is not None else None),
+    )
+    inflight = c.get("inflight")
+    n_leaves = extra["pytree"]["n_leaves"]
+    if inflight is not None and n_leaves != len(leaves):
+        raise ValueError(f"leaf count mismatch: {n_leaves} vs {len(leaves)}")
+    if inflight is not None and inflight["plane"] == "batched":
+        devstate = (tuple(leaves) if _mis_state(metric) else leaves[0])
+        cursor.inflight_group = GroupState(
+            next_block=inflight["next_block"],
+            bucket_map=np.asarray(inflight["bucket_map"], np.int64),
+            state=devstate,
+            supports=np.asarray(inflight["supports"], np.int64),
+            found=np.asarray(inflight["found"], np.int64),
+            overflowed=np.asarray(inflight["overflowed"], bool),
+            blocks_run=np.asarray(inflight["blocks_run"], np.int64),
+            dispatches=inflight["dispatches"],
+        )
+    elif inflight is not None and inflight["plane"] == "distributed":
+        cursor.inflight_super = SuperBlockState(
+            next_block=inflight["next_block"],
+            bitmaps=leaves[0],
+            counts=leaves[1],
+            found=np.asarray(inflight["found"], np.int64),
+            overflowed=np.asarray(inflight["overflowed"], bool),
+            blocks_run=np.asarray(inflight["blocks_run"], np.int64),
+            super_blocks_run=inflight["super_blocks_run"],
+            dispatches=inflight["dispatches"],
+        )
+    return SessionState(loop=loop, cursor=cursor)

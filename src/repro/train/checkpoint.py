@@ -12,8 +12,16 @@ Guarantees:
   * elastic: leaves are saved as *full logical arrays* so a restore may use
     a different mesh shape (re-sharding happens on load via device_put);
   * resumable data pipeline: the manifest carries opaque `extra` state
-    (data-pipeline cursor, rng key, mining super-block index);
-  * retention: keep_last prunes old steps after a successful COMMIT.
+    (data-pipeline cursor, rng key, mining level/group/super-block cursor —
+    the mining session runtime keeps its whole host-side state here);
+  * validated `extra`: `extra` must round-trip through JSON — `save`
+    rejects non-serializable state up front (fail fast on the host, never
+    a half-written manifest) and normalizes it through an encode/decode
+    cycle so save-time and restore-time values are identical (tuples
+    become lists *before* the write, not after the crash);
+  * retention: keep_last prunes old steps after a successful COMMIT, and
+    stale ``step_*.tmp`` directories abandoned by a crashed writer are
+    swept on the next save.
 
 An async flavor (`save_async`) offloads the host write to a thread so the
 next step's compute overlaps the checkpoint I/O.
@@ -31,9 +39,52 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending",
+           "validate_extra"]
+
+FORMAT_VERSION = 1
+
+# a step_*.tmp untouched for this long was abandoned by a crashed writer
+# (a live save_async thread is still appending/fsyncing well within this)
+_STALE_TMP_S = 60.0
 
 _PENDING: list = []
+
+
+def validate_extra(extra: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    """Normalize + validate the opaque `extra` manifest slot.
+
+    Returns the JSON round-trip of ``extra`` (so the caller sees exactly
+    what a restore will see), raising a `TypeError` naming the offending
+    key when any value is not JSON-serializable.  Generalized for cursor
+    state beyond the original flat data-pipeline dict: arbitrarily nested
+    session cursors (level / pattern-group / super-block indices) are fine;
+    arrays and other device state belong in the pytree, not here.
+    """
+    return json.loads(_ensure_json_extra(extra))
+
+
+def _ensure_json_extra(extra: Optional[Dict[str, Any]]) -> str:
+    """Serialize-validate ``extra`` once; returns the JSON text.
+
+    `save` uses this directly — the manifest write re-normalizes anyway, so
+    the extra `loads` of `validate_extra` would be pure overhead on the
+    snapshot hot path (sessions may cut a snapshot per root block).
+    """
+    if extra is None:
+        return "{}"
+    if not isinstance(extra, dict):
+        raise TypeError(f"extra must be a dict, got {type(extra).__name__}")
+    try:
+        return json.dumps(extra)
+    except TypeError:
+        for key, value in extra.items():
+            try:
+                json.dumps(value)
+            except TypeError as e:
+                raise TypeError(
+                    f"extra[{key!r}] is not JSON-serializable: {e}") from e
+        raise
 
 
 def _tree_paths(tree) -> Tuple[list, Any]:
@@ -43,6 +94,8 @@ def _tree_paths(tree) -> Tuple[list, Any]:
 
 def save(root: str | os.PathLike, step: int, tree, *,
          extra: Optional[Dict[str, Any]] = None, keep_last: int = 3) -> Path:
+    _ensure_json_extra(extra)  # fail fast, before any disk write
+    extra = extra or {}
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
     final = root / f"step_{step:08d}"
@@ -53,10 +106,11 @@ def save(root: str | os.PathLike, step: int, tree, *,
 
     leaves, treedef = _tree_paths(tree)
     manifest = {
+        "format_version": FORMAT_VERSION,
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
-        "extra": extra or {},
+        "extra": extra,
         "time": time.time(),
         "leaves": [],
     }
@@ -76,11 +130,20 @@ def save(root: str | os.PathLike, step: int, tree, *,
     tmp.rename(final)
     (final / "COMMIT").write_text("ok")
 
-    # retention
+    # retention — committed steps beyond keep_last, plus any stale tmp dirs
+    # abandoned by a writer that crashed before its rename (ours was either
+    # renamed away above or never existed at this point)
     steps = sorted(p for p in root.glob("step_????????")
                    if (p / "COMMIT").exists())
     for old in steps[:-keep_last]:
         shutil.rmtree(old, ignore_errors=True)
+    for junk in root.glob("step_????????.tmp"):
+        try:  # age-guarded: never race a concurrent save_async writer
+            stale = time.time() - junk.stat().st_mtime > _STALE_TMP_S
+        except OSError:
+            continue
+        if stale:
+            shutil.rmtree(junk, ignore_errors=True)
     return final
 
 

@@ -1,0 +1,227 @@
+"""Resumable mining sessions — codec roundtrip + crash-injection resume.
+
+The resume contract under test (ISSUE 3 acceptance): a mining run killed
+at *any* snapshot point — every level boundary and every mid-pattern
+block — and resumed from disk produces a `MiningResult` identical to the
+uninterrupted oracle in every field except wall clock (``elapsed_s``,
+per-level ``wall_s``); and a crash *during* a save never corrupts the
+last committed snapshot.
+
+Graphs are deliberately tiny (the contract is structural, not scale-
+dependent) so the kill-at-every-snapshot sweeps stay inside CI budget.
+"""
+import pytest
+from hypothesis import given, settings, HealthCheck
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.core.flexis import MiningLoopState, PatternStats
+from repro.data.synthetic import rmat_graph
+from repro.runtime import (
+    MiningSession, SessionMismatch, decode_session, encode_session,
+    load_session, SessionState,
+)
+from repro.train import checkpoint as ckpt
+from tests.conftest import patterns
+
+
+class Boom(Exception):
+    """Stands in for SIGKILL: aborts the session driver mid-run."""
+
+
+def _graph():
+    return rmat_graph(64, 320, n_labels=2, seed=3, undirected=True)
+
+
+def _match_cfg():
+    return MatchConfig(cap=512, root_block=16, chunk=16, max_chunks=4,
+                       bisect_iters=7)
+
+
+def _cfg(metric="mis", **kw):
+    kw.setdefault("sigma", 6)
+    kw.setdefault("lam", 1.0)
+    kw.setdefault("max_pattern_size", 3)
+    kw.setdefault("match", _match_cfg())
+    return MiningConfig(metric=metric, **kw)
+
+
+def _norm(res):
+    """Everything in a MiningResult except wall-clock fields."""
+    return dict(
+        frequent=[(p.key(), s) for p, s in res.frequent],
+        searched=res.searched,
+        stats=[(st.pattern.key(), st.support, st.tau, st.frequent,
+                st.embeddings_found, st.overflowed, st.blocks_run)
+               for st in res.stats],
+        per_level={k: {kk: vv for kk, vv in v.items() if kk != "wall_s"}
+                   for k, v in res.per_level.items()},
+        timed_out=res.timed_out,
+        peak=res.peak_device_bytes,
+    )
+
+
+def _killed_session(g, cfg, ckpt_dir, kill_at, **kw):
+    """Run a session that dies right after its kill_at-th snapshot.
+
+    Returns True if the bomb fired (False: the run finished first).
+    """
+    sess = MiningSession(g, cfg, ckpt_dir, **kw)
+    orig, count = sess._save, [0]
+
+    def bomb(state):
+        orig(state)
+        count[0] += 1
+        if count[0] >= kill_at:
+            raise Boom()
+
+    sess._save = bomb
+    try:
+        sess.run()
+        return False
+    except Boom:
+        return True
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(patterns(min_k=2, max_k=4), patterns(min_k=2, max_k=4))
+def test_codec_roundtrip(p1, p2):
+    loop = MiningLoopState(
+        level=2, cp=[p1, p2], frequent=[(p1, 7)],
+        stats=[PatternStats(pattern=p2, support=3, tau=2, frequent=True,
+                            embeddings_found=11, overflowed=False,
+                            blocks_run=4)],
+        per_level={1: {"candidates": 2, "searched": 2, "pruned": 0,
+                       "frequent": 1, "dispatches": 3, "wall_s": 0.25}},
+        searched=2, peak_bytes=1234, elapsed_s=1.5, timed_out=False)
+    state = SessionState(loop=loop)
+    leaves, extra = encode_session(state, "mis")
+    import json
+    extra = json.loads(json.dumps(extra))  # what the manifest does
+    back = decode_session(leaves, extra, "mis")
+    assert back.cursor is None
+    assert [p.key() for p in back.loop.cp] == [p1.key(), p2.key()]
+    assert [(p.key(), s) for p, s in back.loop.frequent] == [(p1.key(), 7)]
+    assert back.loop.per_level == loop.per_level
+    assert back.loop.stats[0].pattern.key() == p2.key()
+    assert back.loop.stats[0].support == 3
+    assert (back.loop.level, back.loop.searched, back.loop.peak_bytes,
+            back.loop.elapsed_s) == (2, 2, 1234, 1.5)
+
+
+# ---------------------------------------------------------------------------
+# sessions ≡ mine(), fresh and finished
+# ---------------------------------------------------------------------------
+
+def test_session_equals_mine_and_finished_resume(tmp_path):
+    g, cfg = _graph(), _cfg("mis")
+    ref = mine(g, cfg)
+    sess = MiningSession(g, cfg, tmp_path, checkpoint_every=1)
+    assert _norm(sess.run()) == _norm(ref)
+    assert sess.snapshots_written >= 1
+    # resuming a *finished* session re-materializes the result without
+    # re-mining (the final snapshot carries an empty candidate list)
+    again = MiningSession(g, cfg, tmp_path)
+    assert _norm(again.run()) == _norm(ref)
+    assert again.snapshots_written == 0
+
+
+def test_resume_modes(tmp_path):
+    g, cfg = _graph(), _cfg("mis")
+    with pytest.raises(FileNotFoundError):
+        MiningSession(g, cfg, tmp_path / "empty", resume="must").run()
+    MiningSession(g, cfg, tmp_path, checkpoint_every=0).run()
+    assert load_session(tmp_path, cfg) is not None
+
+
+def test_fingerprint_mismatch_refuses_resume(tmp_path):
+    g = _graph()
+    MiningSession(g, _cfg("mis"), tmp_path, checkpoint_every=0).run()
+    with pytest.raises(SessionMismatch):
+        MiningSession(g, _cfg("mis", sigma=7), tmp_path).run()
+    g2 = rmat_graph(64, 320, n_labels=2, seed=4, undirected=True)
+    with pytest.raises(SessionMismatch):
+        MiningSession(g2, _cfg("mis"), tmp_path).run()
+
+
+# ---------------------------------------------------------------------------
+# crash-injection property: kill at EVERY snapshot point, resume, compare
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric,kw", [
+    # complete=True maximizes block count → most mid-pattern snapshots
+    ("mis", dict(complete=True)),
+    # early exit exercises the active-set shrink/re-stack snapshots
+    ("mis_luby", dict(sigma=3, lam=0.5)),
+    ("mni", dict(sigma=3, lam=0.5)),
+    ("frac", dict(sigma=2, lam=0.5)),
+    # sequential plane: level-boundary snapshots only
+    ("mis", dict(sigma=3, lam=0.5, execution="sequential")),
+])
+def test_resume_bit_identical_at_every_snapshot(tmp_path, metric, kw):
+    g = _graph()
+    cfg = _cfg(metric, **kw)
+    ref = mine(g, cfg)
+
+    base = MiningSession(g, cfg, tmp_path / "base", checkpoint_every=1,
+                         keep_last=100)
+    assert _norm(base.run()) == _norm(ref)
+    total = base.snapshots_written
+    assert total >= 2  # at least one level boundary + the final snapshot
+
+    for kill_at in range(1, total + 1):
+        d = tmp_path / f"kill{kill_at}"
+        fired = _killed_session(g, cfg, d, kill_at,
+                                checkpoint_every=1, keep_last=100)
+        assert fired, f"bomb at snapshot {kill_at} never fired"
+        resumed = MiningSession(g, cfg, d, checkpoint_every=1,
+                                keep_last=100).run()
+        assert _norm(resumed) == _norm(ref), f"kill_at={kill_at}"
+
+
+def test_resume_survives_crash_during_save(tmp_path, monkeypatch):
+    """A kill *inside* the checkpoint write (tmp written, COMMIT not) must
+    fall back to the previous committed snapshot and still converge."""
+    g, cfg = _graph(), _cfg("mis", complete=True)
+    ref = mine(g, cfg)
+
+    sess = MiningSession(g, cfg, tmp_path, checkpoint_every=1, keep_last=100)
+    count = [0]
+    real_save = ckpt.save
+
+    def crashing_save(root, step, tree, **kwargs):
+        count[0] += 1
+        if count[0] == 3:  # third snapshot: die mid-write
+            from pathlib import Path
+            tmp = Path(root) / f"step_{step:08d}.tmp"
+            tmp.mkdir(parents=True, exist_ok=True)
+            (tmp / "manifest.json").write_text("{\"half\": true}")
+            raise Boom()
+        return real_save(root, step, tree, **kwargs)
+
+    monkeypatch.setattr("repro.runtime.session.ckpt.save", crashing_save)
+    with pytest.raises(Boom):
+        sess.run()
+    monkeypatch.undo()
+
+    assert ckpt.latest_step(tmp_path) is not None
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1,
+                            keep_last=100).run()
+    assert _norm(resumed) == _norm(ref)
+
+
+def test_coarse_checkpoint_cadence(tmp_path):
+    """checkpoint_every > 1 loses at most that many blocks, never
+    correctness."""
+    g, cfg = _graph(), _cfg("mis", complete=True)
+    ref = mine(g, cfg)
+    fired = _killed_session(g, cfg, tmp_path, 2, checkpoint_every=3,
+                            keep_last=100)
+    assert fired
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=3,
+                            keep_last=100).run()
+    assert _norm(resumed) == _norm(ref)

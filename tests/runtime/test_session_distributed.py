@@ -1,0 +1,107 @@
+"""Cross-mesh session resume — subprocess runs with forced host devices.
+
+The elastic acceptance story: a distributed (shard_map) mining session
+killed mid-pattern on a 4-device mesh resumes on 1 or 8 devices and
+produces the same `MiningResult` — supports, stats, per-level counts —
+because the logical super-block schedule (`MiningConfig.blocks_per_super`)
+is pinned by the session and the carried mIS state is saved as full
+logical arrays.  Only ``wall_s`` and ``dispatches`` are excluded from the
+comparison: dispatch count is the number of actual `shard_map` launches,
+which is a property of the mesh, not of the mined result (3 blocks are 3
+launches on 1 device but 1 launch on 4).
+
+XLA_FLAGS must be set before jax initializes, hence subprocesses.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_DRIVER = textwrap.dedent("""
+    import json, os, sys
+    ndev, ckpt_dir, mode, out = sys.argv[1:5]
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ndev}")
+    import numpy as np, jax
+    assert len(jax.devices()) == int(ndev)
+    from repro.core import MatchConfig, MiningConfig
+    from repro.data.synthetic import rmat_graph
+    from repro.runtime import MiningSession
+
+    g = rmat_graph(100, 600, n_labels=2, seed=3, undirected=True)
+    cfg = MiningConfig(sigma=3, lam=0.5, metric="mis_luby",
+                       max_pattern_size=3, execution="distributed",
+                       blocks_per_super=3,
+                       match=MatchConfig(cap=1024, root_block=16, chunk=16,
+                                         max_chunks=6, bisect_iters=8))
+
+    class Boom(Exception):
+        pass
+
+    sess = MiningSession(g, cfg, ckpt_dir, checkpoint_every=1, keep_last=100)
+    if mode.startswith("kill:"):
+        kill_at = int(mode.split(":")[1])
+        orig, count = sess._save, [0]
+        def bomb(state):
+            orig(state)
+            count[0] += 1
+            if count[0] >= kill_at:
+                raise Boom()
+        sess._save = bomb
+    try:
+        res = sess.run()
+    except Boom:
+        print("KILLED", flush=True)
+        sys.exit(0)
+    json.dump({
+        "frequent": [[p.labels.tolist(), p.edges(), int(s)]
+                     for p, s in res.frequent],
+        "searched": res.searched,
+        "stats": [[st.pattern.labels.tolist(), st.pattern.edges(),
+                   st.support, st.tau, st.frequent, st.embeddings_found,
+                   st.overflowed, st.blocks_run] for st in res.stats],
+        "per_level": {str(k): {kk: vv for kk, vv in v.items()
+                               if kk not in ("wall_s", "dispatches")}
+                      for k, v in res.per_level.items()},
+        "timed_out": res.timed_out,
+    }, open(out, "w"), sort_keys=True)
+    print("DONE", flush=True)
+""")
+
+
+def _run(ndev, ckpt_dir, mode, out):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", _DRIVER, str(ndev), str(ckpt_dir), mode,
+         str(out)],
+        env=env, capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_mid_super_block_resume_across_mesh_shapes(tmp_path):
+    oracle_json = tmp_path / "oracle.json"
+    out = _run(4, tmp_path / "oracle_ck", "full", oracle_json)
+    assert "DONE" in out
+    oracle = json.loads(oracle_json.read_text())
+    assert oracle["searched"] > 0
+
+    # kill the 4-device run right after its 2nd snapshot (mid-level,
+    # mid-pattern: level 2 runs several super-blocks) …
+    for resume_ndev in (1, 4, 8):
+        ck = tmp_path / f"ck_nd{resume_ndev}"
+        out = _run(4, ck, "kill:2", tmp_path / "killed.json")
+        assert "KILLED" in out
+        # … and resume it on a smaller, equal and larger mesh
+        res_json = tmp_path / f"res_nd{resume_ndev}.json"
+        out = _run(resume_ndev, ck, "resume", res_json)
+        assert "DONE" in out
+        got = json.loads(res_json.read_text())
+        assert got == oracle, f"resume on {resume_ndev} devices diverged"

@@ -1,6 +1,7 @@
 """Checkpoint atomicity / resume / retention / async."""
 import json
-import shutil
+import os
+import time
 from pathlib import Path
 
 import jax
@@ -45,6 +46,81 @@ def test_partial_write_is_ignored(tmp_path):
     got, _, step = ckpt.restore(tmp_path, jax.eval_shape(lambda: t))
     assert step == 1
     _assert_tree_equal(t, got)
+
+
+def _crash_save(root, step, tree, *, crash_after):
+    """Replay `ckpt.save`'s write sequence and die at a chosen point.
+
+    crash_after="tmp": after the tmp-dir write, before the rename (the
+    classic kill-mid-save window); crash_after="rename": after the rename
+    but before COMMIT (the narrower window the COMMIT file closes).
+    """
+    root = Path(root)
+    tmp = root / f"step_{step:08d}.tmp"
+    tmp.mkdir(parents=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    for i, leaf in enumerate(leaves):
+        np.save(tmp / f"arr_{i:05d}.npy", np.asarray(leaf))
+    (tmp / "manifest.json").write_text(json.dumps({
+        "step": step, "treedef": str(treedef), "n_leaves": len(leaves),
+        "extra": {}, "leaves": [
+            {"shape": list(np.asarray(x).shape),
+             "dtype": str(np.asarray(x).dtype)} for x in leaves]}))
+    if crash_after == "tmp":
+        return tmp
+    final = root / f"step_{step:08d}"
+    tmp.rename(final)
+    return final  # crashed before COMMIT
+
+
+def test_crash_between_tmp_write_and_commit(tmp_path):
+    """A kill anywhere in the save window never corrupts the last COMMIT:
+    both crash points fall back to the previous committed step, and the
+    abandoned tmp dir is swept by the next successful save."""
+    t = _tree()
+    ckpt.save(tmp_path, 1, t, extra={"cursor": 11})
+
+    # crash point A: tmp fully written, rename never happened
+    junk_tmp = _crash_save(tmp_path, 2, _tree(9), crash_after="tmp")
+    # crash point B: renamed into place, COMMIT never written
+    _crash_save(tmp_path, 3, _tree(9), crash_after="rename")
+
+    assert ckpt.latest_step(tmp_path) == 1
+    got, extra, step = ckpt.restore(tmp_path, jax.eval_shape(lambda: t))
+    assert step == 1 and extra == {"cursor": 11}
+    _assert_tree_equal(t, got)
+
+    # the junk tmp dir is pruned by the next save once it is stale
+    # (age-guarded so a live concurrent save_async writer is never raced)
+    old = time.time() - 3600
+    os.utime(junk_tmp, (old, old))
+    ckpt.save(tmp_path, 4, t)
+    assert not junk_tmp.exists()
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_fresh_tmp_dir_survives_sweep(tmp_path):
+    """A tmp dir younger than the staleness window is left alone."""
+    t = _tree()
+    live_tmp = _crash_save(tmp_path, 7, t, crash_after="tmp")
+    ckpt.save(tmp_path, 8, t)
+    assert live_tmp.exists()
+
+
+def test_extra_validation():
+    assert ckpt.validate_extra(None) == {}
+    # normalization happens before the write: tuples come back as lists
+    assert ckpt.validate_extra({"cursor": (1, 2)}) == {"cursor": [1, 2]}
+    with pytest.raises(TypeError, match="extra\\['bad'\\]"):
+        ckpt.validate_extra({"bad": np.zeros(3)})
+    with pytest.raises(TypeError, match="dict"):
+        ckpt.validate_extra([1, 2])
+
+
+def test_save_rejects_bad_extra_before_writing(tmp_path):
+    with pytest.raises(TypeError):
+        ckpt.save(tmp_path, 0, _tree(), extra={"arr": np.zeros(2)})
+    assert list(tmp_path.glob("step_*")) == []  # fail-fast: nothing on disk
 
 
 def test_retention(tmp_path):
