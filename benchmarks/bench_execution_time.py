@@ -81,6 +81,91 @@ def _bench_batched_level(rows):
         })
 
 
+def _bench_planner(rows):
+    """Execution-planner A/B cells (PR 4 tentpole acceptance).
+
+    Two regimes, both end-to-end ``mine()`` runs so the planner sees real
+    per-level telemetry:
+
+      * ``planner/compute_bound_P1`` — single-label bounded-degree graph
+        (1–2 candidates per level) under a deliberately oversized
+        graph-global geometry (big cap): one pattern's block saturates the
+        device, the batched plane has nothing to amortize, and the win
+        comes from the planner's occupancy-derived per-level ``cap``.
+        Target: auto ≥ 1.3× over forced batched (derived column).
+      * ``planner/level_P{16,32}`` — the dispatch-bound regime of the
+        PR 1 cells: auto must keep the batched plane's ≥2× win over
+        sequential (derived) while staying within 5% of forced batched
+        (``vs_best`` ≥ 0.95).
+    """
+    import dataclasses
+
+    from repro.core import MatchConfig, MiningConfig, mine
+
+    def timed_mine(g, reps, **kw):
+        cfg = MiningConfig(**kw)
+        res = mine(g, cfg)  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = mine(g, cfg)
+        return (time.perf_counter() - t0) / reps, res
+
+    reps = bench_iters(3, smoke=1)
+
+    # --- compute-bound: P∈{1,2} candidates, oversized cap -----------------
+    n = 2000 if SMOKE else 8000
+    g1 = _bounded_degree_graph(n, deg=2, n_labels=1)
+    big = dataclasses.replace(
+        MatchConfig.for_graph(g1, cap=16384, root_block=256), two_phase=False)
+    kw = dict(sigma=4, lam=1.0, metric="mis", max_pattern_size=3,
+              complete=True, match=big)
+    t = {}
+    out = {}
+    for ex in ("batched", "sequential", "auto"):
+        t[ex], out[ex] = timed_mine(g1, reps, execution=ex, **kw)
+    assert ([(p.k, s) for p, s in out["auto"].frequent]
+            == [(p.k, s) for p, s in out["batched"].frequent]
+            == [(p.k, s) for p, s in out["sequential"].frequent])
+    best = min(t["batched"], t["sequential"])
+    rows.append({
+        "name": f"exec_time/planner/compute_bound_P1/n{n}",
+        "us_per_call": round(t["auto"] * 1e6, 1),
+        "derived": round(t["batched"] / t["auto"], 2),   # ≥1.3 target
+        "sequential_us": round(t["sequential"] * 1e6, 1),
+        "batched_us": round(t["batched"] * 1e6, 1),
+        "vs_best": round(best / t["auto"], 3),           # ≥0.95 target
+    })
+
+    # --- dispatch-bound: the PR 1 P∈{16,32} cells, auto added -------------
+    n = 2000 if SMOKE else 8000
+    g2 = _bounded_degree_graph(n, deg=2, n_labels=8)
+    cfg2 = MatchConfig.for_graph(g2, cap=64, root_block=64)
+    for P in (16, 32):
+        from repro.core.flexis import initial_candidates
+
+        assert len(initial_candidates(g2)) >= P
+        kw = dict(sigma=8, lam=1.0, metric="mis", max_pattern_size=2,
+                  complete=True, match=cfg2)
+        t = {}
+        out = {}
+        for ex in ("batched", "sequential", "auto"):
+            # max_pattern_size=2 bounds the run to one level of ≥P
+            # candidates; slice via batch_patterns like the PR 1 cell
+            t[ex], out[ex] = timed_mine(g2, reps, execution=ex,
+                                        batch_patterns=P, **kw)
+        assert ([(p.k, s) for p, s in out["auto"].frequent]
+                == [(p.k, s) for p, s in out["batched"].frequent])
+        best = min(t["batched"], t["sequential"])
+        rows.append({
+            "name": f"exec_time/planner/level_P{P}/n{n}",
+            "us_per_call": round(t["auto"] * 1e6, 1),
+            "derived": round(t["sequential"] / t["auto"], 2),  # ≥2 target
+            "sequential_us": round(t["sequential"] * 1e6, 1),
+            "batched_us": round(t["batched"] * 1e6, 1),
+            "vs_best": round(best / t["auto"], 3),             # ≥0.95 target
+        })
+
+
 def _bench_expansion_plane(rows):
     """One batched mining level under each expansion plane (PR 2 tentpole).
 
@@ -134,6 +219,7 @@ def _bench_expansion_plane(rows):
 def main() -> None:
     rows = []
     _bench_batched_level(rows)
+    _bench_planner(rows)
     _bench_expansion_plane(rows)
     for ds in BENCH_DATASETS:
         for sigma in SUPPORTS:
@@ -147,7 +233,7 @@ def main() -> None:
                     "timed_out": res.timed_out,
                 })
     emit(rows, ["name", "us_per_call", "derived", "searched", "timed_out",
-                "sequential_us", "batched_us", "speedup"])
+                "sequential_us", "batched_us", "speedup", "vs_best"])
 
 
 if __name__ == "__main__":

@@ -98,7 +98,7 @@ def main() -> None:
     def _sixteen_singles():
         c = jnp.int32(0)
         for plan in plans:
-            emb, n_valid, _, _ = match_block(dev_bg, plan, jnp.int32(0), mcfg)
+            emb, n_valid, _, _, _ = match_block(dev_bg, plan, jnp.int32(0), mcfg)
             _, c = mgu(bitmap_init(bn), jnp.int32(0), emb, n_valid,
                        jnp.int32(10**9), 2)
         return c

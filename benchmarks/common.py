@@ -35,7 +35,7 @@ def run_mine(dataset: str, *, sigma: int, lam: float = 0.4,
              metric: str = "mis", generation: str = "merge",
              scale: Optional[float] = None, max_size: int = BENCH_MAX_SIZE,
              complete: bool = False, time_limit: float = 120.0,
-             execution: str = "batched", seed: int = 0) -> MiningResult:
+             execution: str = "auto", seed: int = 0) -> MiningResult:
     scale = BENCH_SCALE if scale is None else scale
     g = paper_dataset(dataset, scale=scale, seed=seed)
     cfg = MiningConfig(

@@ -110,6 +110,11 @@ def main(argv=None) -> int:
                     help="tiny sizes / few iters (CI smoke job)")
     ap.add_argument("--out", default=None,
                     help="also write all output to this CSV file")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the planner micro-calibration pass "
+                         "(benchmarks/calibrate.py) before the benchmarks "
+                         "and write planner_calibration.json; --smoke "
+                         "always runs it")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -134,6 +139,25 @@ def main(argv=None) -> int:
     matched = 0
     modules = []
     with contextlib.redirect_stdout(stdout):
+        if args.calibrate or (args.smoke and not args.only):
+            # planner cost-model fit: constants the execution planner loads
+            # (repro.core.planner.load_calibration); smoke keeps it cheap
+            print("# === planner calibration [benchmarks.calibrate] ===",
+                  flush=True)
+            t0 = time.monotonic()
+            try:
+                from benchmarks.calibrate import write_calibration
+
+                write_calibration(iters=3 if args.smoke else 20)
+                ok = True
+            except Exception as e:
+                failures += 1
+                ok = False
+                print(f"# FAILED: {e!r}", flush=True)
+            wall = time.monotonic() - t0
+            modules.append({"module": "benchmarks.calibrate",
+                            "wall_s": round(wall, 3), "ok": ok})
+            print(f"# ({wall:.1f}s)", flush=True)
         for label, modname in BENCHES:
             if args.only and args.only not in modname:
                 continue

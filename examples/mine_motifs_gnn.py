@@ -31,7 +31,7 @@ def motif_features(g, patterns, cfg):
     for j, pat in enumerate(patterns):
         plan = make_plan(pat, g)
         for b in range(0, g.n, cfg.root_block):
-            emb, count, _, _ = match_block(dev_g, plan, jnp.int32(b), cfg)
+            emb, count, _, _, _ = match_block(dev_g, plan, jnp.int32(b), cfg)
             rows = np.asarray(emb[: int(count)]).reshape(-1)
             np.add.at(feats[:, j], rows[rows >= 0], 1.0)
     return feats

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_smoke.json against the committed trajectory.
+
+    python scripts/check_bench_regression.py BASELINE FRESH \
+        [--max-ratio 1.3] [--families exec_time/batched_level/ ...]
+
+Gate semantics (the blocking CI bench-smoke job):
+
+  * for every gated row present in BOTH files, ``fresh.us_per_call`` must
+    be ≤ ``max_ratio × baseline.us_per_call`` — slower than that fails;
+  * a gated baseline row MISSING from the fresh run fails (a silently
+    dropped benchmark would otherwise pass forever);
+  * new rows, faster rows, and rows outside the gated families are
+    reported but never fail;
+  * parity rows additionally fail on parity != 1.0 (bit-exactness is not
+    a timing and gets no tolerance).
+
+Timing families are gated with generous headroom (default 1.3×) because
+CI runners are noisy; the point is catching step-function regressions
+(a plane decision gone wrong, a lost program-cache hit), not 5% drift.
+No third-party deps — runs on a bare checkout like scripts/check_links.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_FAMILIES = (
+    "exec_time/batched_level/",
+    "exec_time/gnutella/",
+)
+
+
+def _rows(trajectory: dict) -> dict:
+    return {r["name"]: r for r in trajectory.get("rows", [])}
+
+
+def check(baseline: dict, fresh: dict, *, max_ratio: float = 1.3,
+          families=DEFAULT_FAMILIES):
+    """Returns (failures, notes) — lists of human-readable strings."""
+    base_rows, fresh_rows = _rows(baseline), _rows(fresh)
+    failures, notes = [], []
+
+    for name, b in sorted(base_rows.items()):
+        gated = any(name.startswith(f) for f in families)
+        f = fresh_rows.get(name)
+        if f is None:
+            (failures if gated else notes).append(
+                f"MISSING  {name}: row present in baseline, absent in fresh")
+            continue
+        if b.get("parity") is not None or f.get("parity") is not None:
+            if f.get("parity") != 1.0:
+                failures.append(
+                    f"PARITY   {name}: parity={f.get('parity')} (want 1.0)")
+            continue
+        bt, ft = b.get("us_per_call"), f.get("us_per_call")
+        if not bt or not ft or bt <= 0:
+            continue
+        ratio = ft / bt
+        line = f"{name}: {bt:.1f}us → {ft:.1f}us ({ratio:.2f}x)"
+        if gated and ratio > max_ratio:
+            failures.append(f"SLOWER   {line} > {max_ratio}x gate")
+        elif ratio > max_ratio:
+            notes.append(f"slower (ungated) {line}")
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        notes.append(f"new row  {name}")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_smoke.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_smoke.json")
+    ap.add_argument("--max-ratio", type=float, default=1.3,
+                    help="fail gated rows slower than this ratio (def 1.3)")
+    ap.add_argument("--families", nargs="*", default=list(DEFAULT_FAMILIES),
+                    help="row-name prefixes the gate blocks on")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures, notes = check(baseline, fresh, max_ratio=args.max_ratio,
+                            families=args.families)
+    for n in notes:
+        print(f"note: {n}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        print(f"bench regression gate: {len(failures)} failure(s) "
+              f"(gate {args.max_ratio}x on {', '.join(args.families)})")
+        return 1
+    print(f"bench regression gate: OK "
+          f"({len(baseline.get('rows', []))} baseline rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

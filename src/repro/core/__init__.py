@@ -17,6 +17,13 @@ from .generation import (
 )
 from .plan import PatternPlan, make_plan
 from .matcher import MatchConfig, match_block
+from .planner import (
+    CostModel,
+    ExecutionPlanner,
+    LevelPlan,
+    load_calibration,
+    root_block_order,
+)
 from .flexis import (
     MiningConfig,
     MiningResult,
@@ -35,6 +42,8 @@ __all__ = [
     "core_graphs", "core_groups", "edge_extension_candidates",
     "generate_new_patterns", "size2_patterns",
     "PatternPlan", "make_plan", "MatchConfig", "match_block",
+    "CostModel", "ExecutionPlanner", "LevelPlan", "load_calibration",
+    "root_block_order",
     "MiningConfig", "MiningResult", "PatternStats", "evaluate_pattern",
     "initial_candidates", "mine", "tau_threshold",
 ]

@@ -62,7 +62,8 @@ from . import metrics as metrics_lib
 
 __all__ = [
     "BatchedResult", "GroupState", "LevelTelemetry", "PatternOutcome",
-    "batched_mis_supports", "evaluate_level_batched", "level_groups",
+    "batched_mis_supports", "collect_pattern_embeddings",
+    "evaluate_level_batched", "level_groups",
     "program_cache_stats", "clear_program_cache", "stack_plans",
 ]
 
@@ -78,18 +79,22 @@ _INT32_MAX = np.iinfo(np.int32).max
 # bounding memory and the set of compiled bucket shapes.
 DEFAULT_MAX_BATCH = 64
 
+# blocks stacked per dispatch by the mis_exact embedding collector — also
+# the transient-memory multiplier `flexis._device_bytes` accounts for it
+MIS_EXACT_BLOCKS_PER_DISPATCH = 8
+
 
 # ---------------------------------------------------------------------------
 # compiled-program cache: one traced step per (metric, k, match geometry)
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _step_fn(metric: str, k: int, cfg: MatchConfig):
+def _step_fn(metric: str, k: int, cfg: MatchConfig, unbatched: bool = False):
     """Jitted batched block step for one (metric, k, match geometry).
 
     Signature of the returned callable:
         step(dev_g, plans, block_start, state, taus)
-            -> (state', values, found, overflowed)
+            -> (state', values, found, overflowed, peaks)
 
     Shapes/dtypes (P = padded pattern-bucket size, n = graph vertices):
       dev_g:   DeviceGraph pytree (unbatched; broadcasts over P).
@@ -104,52 +109,69 @@ def _step_fn(metric: str, k: int, cfg: MatchConfig):
       values:  (P,) running support — int32 counts/minima, float32 mass.
       found:   (P,) int32 embeddings enumerated this block;
       overflowed: (P,) bool frontier-capacity flags.
+      peaks:   (P,) int32 max frontier occupancy inside the block
+               (`match_block`'s peak — the planner's cap-sizing signal).
+
+    ``unbatched=True`` compiles the P == 1 bucket *without* the vmap: the
+    math is identical (size-1 batch), but XLA fuses the unbatched op chain
+    where the degenerate batch dimensions of the vmapped program block
+    cross-op fusion on wide ``cap·chunk`` grids — measured ~1.1–1.3×
+    on single-pattern compute-bound levels (docs/architecture.md "Why the
+    vmapped matcher loses fusion").  Results are bit-identical.
     """
 
     if metric in ("mis", "mis_luby"):
 
+        def step_one(g, plan, block_start, bm, cnt, tau):
+            emb, n_valid, found, ovf, peak = match_block(
+                g, plan, block_start, cfg)
+            if metric == "mis":
+                bm, cnt = mis_lib.mis_greedy_update(
+                    bm, cnt, emb, n_valid, tau, k)
+            else:
+                bm, cnt = mis_lib.mis_luby_update(
+                    bm, cnt, emb, n_valid, tau, k, g.n)
+            return bm, cnt, found, ovf, peak
+
         def step(g, plans, block_start, state, taus):
             bitmaps, counts = state
-
-            def one(plan, bm, cnt, tau):
-                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
-                if metric == "mis":
-                    bm, cnt = mis_lib.mis_greedy_update(
-                        bm, cnt, emb, n_valid, tau, k)
-                else:
-                    bm, cnt = mis_lib.mis_luby_update(
-                        bm, cnt, emb, n_valid, tau, k, g.n)
-                return bm, cnt, found, ovf
-
-            bitmaps, counts, found, ovf = jax.vmap(one)(
+            if unbatched:
+                squeeze = jax.tree_util.tree_map(lambda a: a[0], plans)
+                bm, cnt, found, ovf, peak = step_one(
+                    g, squeeze, block_start, bitmaps[0], counts[0], taus[0])
+                return ((bm[None], cnt[None]), cnt[None], found[None],
+                        ovf[None], peak[None])
+            bitmaps, counts, found, ovf, peak = jax.vmap(
+                lambda plan, bm, cnt, tau: step_one(
+                    g, plan, block_start, bm, cnt, tau))(
                 plans, bitmaps, counts, taus)
-            return (bitmaps, counts), counts, found, ovf
+            return (bitmaps, counts), counts, found, ovf, peak
 
-    elif metric == "mni":
+    elif metric in ("mni", "frac"):
 
-        def step(g, plans, block_start, state, taus):
-            del taus  # MNI needs no device-side τ; the host owns early exit
-
-            def one(plan, images):
-                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
-                images = metrics_lib.mni_update(images, emb, n_valid, k)
-                return images, metrics_lib.mni_value(images), found, ovf
-
-            state, values, found, ovf = jax.vmap(one)(plans, state)
-            return state, values, found, ovf
-
-    elif metric == "frac":
+        def step_one(g, plan, block_start, table):
+            emb, n_valid, found, ovf, peak = match_block(
+                g, plan, block_start, cfg)
+            if metric == "mni":
+                table = metrics_lib.mni_update(table, emb, n_valid, k)
+                value = metrics_lib.mni_value(table)
+            else:
+                table = metrics_lib.frac_update(table, emb, n_valid, k)
+                value = metrics_lib.frac_value(table)
+            return table, value, found, ovf, peak
 
         def step(g, plans, block_start, state, taus):
-            del taus
-
-            def one(plan, counts):
-                emb, n_valid, found, ovf = match_block(g, plan, block_start, cfg)
-                counts = metrics_lib.frac_update(counts, emb, n_valid, k)
-                return counts, metrics_lib.frac_value(counts), found, ovf
-
-            state, values, found, ovf = jax.vmap(one)(plans, state)
-            return state, values, found, ovf
+            del taus  # MNI/frac need no device-side τ; the host owns early exit
+            if unbatched:
+                squeeze = jax.tree_util.tree_map(lambda a: a[0], plans)
+                table, value, found, ovf, peak = step_one(
+                    g, squeeze, block_start, state[0])
+                return (table[None], value[None], found[None], ovf[None],
+                        peak[None])
+            state, values, found, ovf, peak = jax.vmap(
+                lambda plan, table: step_one(g, plan, block_start, table))(
+                plans, state)
+            return state, values, found, ovf, peak
 
     else:
         raise ValueError(f"metric {metric!r} has no batched step")
@@ -216,6 +238,9 @@ class PatternOutcome:
     embeddings_found: int
     overflowed: bool
     blocks_run: int
+    # max frontier occupancy observed over the blocks this pattern ran
+    # (post-clip, ≤ cap) — the planner's per-level cap-sizing input
+    max_count: int = 0
 
 
 @dataclasses.dataclass
@@ -234,6 +259,8 @@ class LevelTelemetry:
 
     state_bytes: int = 0          # peak transient device state (pattern axis)
     dispatches: int = 0           # device program invocations
+    max_count: int = 0            # peak frontier occupancy across patterns
+    overflowed: bool = False      # any pattern hit the frontier cap
 
 
 @dataclasses.dataclass
@@ -248,7 +275,7 @@ class GroupState:
     per-pattern host accumulators for the whole group (P₀-aligned).
     """
 
-    next_block: int               # next root block to run
+    next_block: int               # next schedule position (block-order index)
     bucket_map: np.ndarray        # (P_pad,) int — group index per row, -1 pad
     state: object                 # device metric state, leading P_pad axis
     supports: np.ndarray          # (P₀,) int64
@@ -256,6 +283,7 @@ class GroupState:
     overflowed: np.ndarray        # (P₀,) bool
     blocks_run: np.ndarray        # (P₀,) int64
     dispatches: int = 0
+    max_count: Optional[np.ndarray] = None   # (P₀,) int64 peak occupancy
 
 
 def level_groups(patterns: Sequence[Pattern], max_batch: int):
@@ -285,9 +313,15 @@ def _mine_group(
     deadline: Optional[float] = None,
     resume: Optional[GroupState] = None,
     on_block=None,
+    block_order: Optional[np.ndarray] = None,
 ) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
     """Run one same-k candidate group level-wise; returns
     (outcomes, timed_out, dispatches).
+
+    ``block_order`` is the static root-block schedule (a permutation of
+    block ids from `planner.root_block_order`; None = vertex-id order).
+    The loop cursor — including `GroupState.next_block` — indexes into
+    the *schedule*, so a resumed run walks the identical permutation.
 
     Per-pattern histories reproduce the sequential loop exactly: a pattern
     accumulates (found, overflowed, blocks) for precisely the block prefix the
@@ -317,8 +351,6 @@ def _mine_group(
     if not complete:
         dev_tau_full[:] = np.minimum(taus_np, _INT32_MAX)
 
-    step = _step_fn(metric, k, cfg)
-
     def bucket_taus(bucket_map: np.ndarray) -> jnp.ndarray:
         safe = np.where(bucket_map >= 0, bucket_map, 0)
         return jnp.asarray(
@@ -329,6 +361,7 @@ def _mine_group(
         found = np.zeros(P0, np.int64)
         ovf = np.zeros(P0, bool)
         blocks_run = np.zeros(P0, np.int64)
+        max_count = np.zeros(P0, np.int64)
         # current bucket: stacked plans + state + map to group idx (-1 = pad)
         P_pad = _bucket_size(P0)
         bucket_map = np.concatenate([np.arange(P0), np.full(P_pad - P0, -1)])
@@ -340,6 +373,8 @@ def _mine_group(
         found = resume.found.astype(np.int64).copy()
         ovf = resume.overflowed.astype(bool).copy()
         blocks_run = resume.blocks_run.astype(np.int64).copy()
+        max_count = (np.zeros(P0, np.int64) if resume.max_count is None
+                     else resume.max_count.astype(np.int64).copy())
         bucket_map = np.asarray(resume.bucket_map, np.int64).copy()
         state = jax.tree_util.tree_map(jnp.asarray, resume.state)
         start_block = int(resume.next_block)
@@ -351,23 +386,33 @@ def _mine_group(
     timed_out = False
     unfinished: set = set()
     n_blocks = -(-n // cfg.root_block)
+    if block_order is None:
+        block_order = np.arange(n_blocks, dtype=np.int64)
+    assert block_order.shape[0] == n_blocks
+    # the P=1 bucket compiles without the vmap (fusion win, bit-identical);
+    # re-resolved only when a shrink re-stack changes the bucket width
+    step = _step_fn(metric, k, cfg, unbatched=bucket_map.size == 1)
     for b in range(start_block, n_blocks):
         if deadline is not None and time.monotonic() > deadline:
             timed_out = True
             unfinished = {int(i) for i in bucket_map[bucket_map >= 0]}
             break
-        state, values, blk_found, blk_ovf = step(
-            dev_g, plans_cur, jnp.int32(b * cfg.root_block), state, taus_dev)
+        state, values, blk_found, blk_ovf, blk_peak = step(
+            dev_g, plans_cur,
+            jnp.int32(int(block_order[b]) * cfg.root_block), state, taus_dev)
         dispatches += 1
         values_np = np.asarray(values)
         found_np = np.asarray(blk_found)
         ovf_np = np.asarray(blk_ovf)
+        peak_np = np.asarray(blk_peak)
 
         live = bucket_map >= 0
         gi = bucket_map[live]
         found[gi] += found_np[live].astype(np.int64)
         ovf[gi] |= ovf_np[live]
         blocks_run[gi] += 1
+        max_count[gi] = np.maximum(max_count[gi],
+                                   peak_np[live].astype(np.int64))
         if metric == "frac":
             supports[gi] = np.floor(values_np[live].astype(np.float64)).astype(np.int64)
         else:
@@ -387,6 +432,8 @@ def _mine_group(
                 state = _gather_rows(state, sel)
                 bucket_map = np.concatenate([still, np.full(pad, -1)])
                 taus_dev = bucket_taus(bucket_map)
+                step = _step_fn(metric, k, cfg,
+                                unbatched=bucket_map.size == 1)
             elif still.size < gi.size:
                 # same bucket; just stop accounting for the finished patterns
                 bucket_map = np.where(np.isin(bucket_map, still), bucket_map, -1)
@@ -396,7 +443,7 @@ def _mine_group(
                 next_block=b + 1, bucket_map=bucket_map.copy(), state=state,
                 supports=supports.copy(), found=found.copy(),
                 overflowed=ovf.copy(), blocks_run=blocks_run.copy(),
-                dispatches=dispatches))
+                dispatches=dispatches, max_count=max_count.copy()))
 
     outcomes: List[Optional[PatternOutcome]] = [
         None if i in unfinished else PatternOutcome(
@@ -405,6 +452,7 @@ def _mine_group(
             embeddings_found=int(found[i]),
             overflowed=bool(ovf[i]),
             blocks_run=int(blocks_run[i]),
+            max_count=int(max_count[i]),
         )
         for i in range(P0)
     ]
@@ -423,6 +471,7 @@ def evaluate_level_batched(
     deadline: Optional[float] = None,
     max_batch: int = DEFAULT_MAX_BATCH,
     hooks=None,
+    block_order: Optional[np.ndarray] = None,
 ) -> Tuple[List[Optional[PatternOutcome]], bool, LevelTelemetry]:
     """Evaluate a whole candidate level with the batched data plane.
 
@@ -484,7 +533,7 @@ def evaluate_level_batched(
         got, group_timed_out, dispatches = _mine_group(
             dev_g, plans, group_taus, metric, cfg,
             complete=complete, n=host_g.n, deadline=deadline,
-            resume=resume, on_block=on_block)
+            resume=resume, on_block=on_block, block_order=block_order)
         telemetry.dispatches += dispatches
         for i, out in zip(idxs, got):
             outcomes[i] = out
@@ -494,7 +543,88 @@ def evaluate_level_batched(
             timed_out = True
             break
     assert timed_out or all(o is not None for o in outcomes)
+    for o in outcomes:
+        if o is not None:
+            telemetry.max_count = max(telemetry.max_count, o.max_count)
+            telemetry.overflowed |= o.overflowed
     return outcomes, timed_out, telemetry
+
+
+# ---------------------------------------------------------------------------
+# batched embedding collection (mis_exact's device half)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _collect_fn(k: int, cfg: MatchConfig):
+    """Jitted embedding collector: `match_block` vmapped over a *blocks*
+    axis — (B,) block starts in, ((B, cap, k) emb, (B,) count/found/ovf/peak)
+    out.  One program per (k, geometry, B); B is bucketed by the caller."""
+
+    def collect(g, plan, starts):
+        return jax.vmap(lambda s: match_block(g, plan, s, cfg))(starts)
+
+    return jax.jit(collect)
+
+
+def collect_pattern_embeddings(
+    dev_g: DeviceGraph,
+    plan: PatternPlan,
+    cfg: MatchConfig,
+    n: int,
+    *,
+    block_order: Optional[np.ndarray] = None,
+    blocks_per_dispatch: int = MIS_EXACT_BLOCKS_PER_DISPATCH,
+) -> Tuple[np.ndarray, int, bool, int, int, int]:
+    """Enumerate EVERY block's embeddings for one pattern, batched on device.
+
+    The device half of ``mis_exact``: instead of one dispatch per root
+    block (the pre-planner sequential loop), blocks stack on a vmapped
+    leading axis — ``blocks_per_dispatch`` per program — and only the
+    branch-and-bound MIS solve stays on host.  Tail dispatches pad with
+    ``block_start = n`` (matches no roots), so results are independent of
+    the dispatch width.
+
+    Returns (embeddings (m, k) int32 in schedule order, found, overflowed,
+    blocks_run, max_count, dispatches) — field-for-field what the
+    per-block sequential loop accumulated, because each block's
+    (emb, count) is unchanged and exact MIS is invariant to embedding
+    order anyway.
+    """
+    assert blocks_per_dispatch >= 1
+    n_blocks = -(-n // cfg.root_block)
+    if block_order is None:
+        block_order = np.arange(n_blocks, dtype=np.int64)
+    assert block_order.shape[0] == n_blocks
+    collect = _collect_fn(plan.k, cfg)
+
+    chunks: List[np.ndarray] = []
+    found_total = 0
+    overflowed = False
+    max_count = 0
+    dispatches = 0
+    for lo in range(0, n_blocks, blocks_per_dispatch):
+        ids = block_order[lo: lo + blocks_per_dispatch]
+        pad = blocks_per_dispatch - ids.shape[0]
+        starts = np.concatenate(
+            [ids * cfg.root_block, np.full(pad, n, np.int64)])
+        emb, count, found, ovf, peak = collect(
+            dev_g, plan, jnp.asarray(starts, jnp.int32))
+        dispatches += 1
+        counts = np.asarray(count)
+        valid = ids.shape[0]
+        found_total += int(np.asarray(found)[:valid].sum())
+        overflowed |= bool(np.asarray(ovf)[:valid].any())
+        max_count = max(max_count, int(np.asarray(peak)[:valid].max()))
+        emb_np = None
+        for j in range(valid):
+            c = int(counts[j])
+            if c:
+                if emb_np is None:
+                    emb_np = np.asarray(emb)
+                chunks.append(emb_np[j, :c])
+    embs = (np.concatenate(chunks, axis=0) if chunks
+            else np.zeros((0, plan.k), np.int32))
+    return embs, found_total, overflowed, n_blocks, max_count, dispatches
 
 
 # ---------------------------------------------------------------------------

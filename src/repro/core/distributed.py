@@ -129,7 +129,7 @@ def sharded_mis_step(g: DeviceGraph, plan: PatternPlan, block_starts,
     """
 
     def step(block_start, bm, cnt):
-        emb, n_valid, found, _ = match_block(g, plan, block_start[0], cfg)
+        emb, n_valid, found, _, _ = match_block(g, plan, block_start[0], cfg)
         bm, cnt = _luby_rounds_global(bm, cnt, emb, n_valid, tau, k, n,
                                       cfg.cap, axis)
         return bm, cnt, jax.lax.psum(found, axis)
@@ -160,26 +160,29 @@ def sharded_batched_mis_step(g: DeviceGraph, plans: PatternPlan, block_starts,
 
     plans/bitmaps/counts/taus: leading (P,) pattern axis, replicated.
     block_starts: (ndev,) int32 — one root-block origin per device.
-    Returns (bitmaps, counts, found, overflowed) with found summed and
-    overflow OR-ed over the mesh, each (P,).
+    Returns (bitmaps, counts, found, overflowed, peak) with found summed,
+    overflow OR-ed and peak frontier occupancy max-ed over the mesh,
+    each (P,).
     """
 
     def step(block_start, bms, cnts):
         def one(plan, bm, cnt, tau):
-            emb, n_valid, found, ovf = match_block(g, plan, block_start[0], cfg)
+            emb, n_valid, found, ovf, peak = match_block(
+                g, plan, block_start[0], cfg)
             bm, cnt = _luby_rounds_global(bm, cnt, emb, n_valid, tau, k, n,
                                           cfg.cap, axis)
-            return bm, cnt, found, ovf
+            return bm, cnt, found, ovf, peak
 
-        bms, cnts, found, ovf = jax.vmap(one)(plans, bms, cnts, taus)
+        bms, cnts, found, ovf, peak = jax.vmap(one)(plans, bms, cnts, taus)
         return (bms, cnts, jax.lax.psum(found, axis),
-                jax.lax.psum(ovf.astype(jnp.int32), axis) > 0)
+                jax.lax.psum(ovf.astype(jnp.int32), axis) > 0,
+                jax.lax.pmax(peak, axis))
 
     return jax_compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axis), P(), P()),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         check_vma=False,
     )(block_starts, bitmaps, counts)
 
@@ -201,7 +204,7 @@ class SuperBlockState:
     ``next_block`` cursor (in root-block units).
     """
 
-    next_block: int               # first root block of the next super-block
+    next_block: int               # next schedule position (block-order index)
     bitmaps: Any                  # (P, ⌈n/32⌉) uint32 — logical/replicated
     counts: Any                   # (P,) int32
     found: np.ndarray             # (P,) int64, frozen per pattern at τ
@@ -209,6 +212,7 @@ class SuperBlockState:
     blocks_run: np.ndarray        # (P,) int64, frozen per pattern at τ
     super_blocks_run: int = 0
     dispatches: int = 0           # sharded step invocations (telemetry)
+    max_count: Optional[np.ndarray] = None  # (P,) int64 peak occupancy
 
     def supports(self) -> np.ndarray:
         return np.asarray(self.counts, np.int64)
@@ -222,6 +226,7 @@ def _init_super_block_state(P_: int, n: int) -> SuperBlockState:
         found=np.zeros(P_, np.int64),
         overflowed=np.zeros(P_, bool),
         blocks_run=np.zeros(P_, np.int64),
+        max_count=np.zeros(P_, np.int64),
     )
 
 
@@ -236,6 +241,7 @@ def iter_batched_supports(
     complete: bool = False,
     blocks_per_super: Optional[int] = None,
     state: Optional[SuperBlockState] = None,
+    block_order: Optional[np.ndarray] = None,
 ) -> Iterator[SuperBlockState]:
     """Mine a same-k batch one *logical* super-block at a time.
 
@@ -251,6 +257,12 @@ def iter_batched_supports(
     exactly regardless of ``ndev``; runs with different widths agree on
     supports but may differ in the telemetry fields (they see different
     early-exit granularity).
+
+    ``block_order`` is the static root-block schedule (a permutation of
+    block ids, `planner.root_block_order`; None = vertex-id order).  The
+    super-block cursor — including `SuperBlockState.next_block` — indexes
+    into the schedule, which stays mesh-shape-invariant: the permutation
+    is a pure function of (graph, root_block, root_order).
     """
     assert len(patterns) == len(taus) and len(patterns) > 0
     k = patterns[0].k
@@ -279,11 +291,16 @@ def iter_batched_supports(
     found = state.found.copy()
     ovf = state.overflowed.copy()
     blocks_run = state.blocks_run.copy()
+    max_count = (np.zeros(P_, np.int64) if state.max_count is None
+                 else state.max_count.copy())
     next_block = int(state.next_block)
     super_blocks = int(state.super_blocks_run)
     dispatches = int(state.dispatches)
 
     n_blocks = -(-n // cfg.root_block)
+    if block_order is None:
+        block_order = np.arange(n_blocks, dtype=np.int64)
+    assert block_order.shape[0] == n_blocks
     while next_block < n_blocks:
         counts_np = np.asarray(counts, np.int64)
         if not complete and bool((counts_np >= taus_np).all()):
@@ -295,29 +312,32 @@ def iter_batched_supports(
         stop = min(next_block + bps, n_blocks)
         sb_found = np.zeros(P_, np.int64)
         sb_ovf = np.zeros(P_, bool)
+        sb_peak = np.zeros(P_, np.int64)
         for lo in range(next_block, stop, ndev):
             # pad tail dispatches with empty blocks (start ≥ n matches no
             # roots) so a super-block never leaks into the next one
-            blocks = lo + np.arange(ndev)
+            pos = lo + np.arange(ndev)
+            ids = block_order[np.minimum(pos, n_blocks - 1)]
             starts = jnp.asarray(
-                np.where(blocks < stop, blocks * cfg.root_block, n),
-                jnp.int32)
-            bitmaps, counts, d_found, d_ovf = sharded_batched_mis_step(
+                np.where(pos < stop, ids * cfg.root_block, n), jnp.int32)
+            bitmaps, counts, d_found, d_ovf, d_peak = sharded_batched_mis_step(
                 dev_g, plans, starts, bitmaps, counts, tau_dev,
                 cfg=cfg, k=k, n=n, axis=axis, mesh=mesh)
             sb_found += np.asarray(d_found, np.int64)
             sb_ovf |= np.asarray(d_ovf, bool)
+            sb_peak = np.maximum(sb_peak, np.asarray(d_peak, np.int64))
             dispatches += 1
         found[active] += sb_found[active]
         ovf[active] |= sb_ovf[active]
         blocks_run[active] += stop - next_block
+        max_count[active] = np.maximum(max_count[active], sb_peak[active])
         next_block = stop
         super_blocks += 1
         state = SuperBlockState(
             next_block=next_block, bitmaps=bitmaps, counts=counts,
             found=found.copy(), overflowed=ovf.copy(),
             blocks_run=blocks_run.copy(), super_blocks_run=super_blocks,
-            dispatches=dispatches)
+            dispatches=dispatches, max_count=max_count.copy())
         yield state
 
 
@@ -368,6 +388,7 @@ def evaluate_level_distributed(
     max_batch: int = batched_lib.DEFAULT_MAX_BATCH,
     blocks_per_super: Optional[int] = None,
     hooks=None,
+    block_order: Optional[np.ndarray] = None,
 ) -> Tuple[List[Optional["batched_lib.PatternOutcome"]], bool,
            "batched_lib.LevelTelemetry"]:
     """Evaluate a whole candidate level on the mesh (mIS/Luby semantics).
@@ -411,7 +432,8 @@ def evaluate_level_distributed(
         it = iter_batched_supports(
             host_g, group_pats, group_taus, mesh=mesh, axis=axis,
             match_cfg=cfg, complete=complete,
-            blocks_per_super=blocks_per_super, state=state)
+            blocks_per_super=blocks_per_super, state=state,
+            block_order=block_order)
         last = state if state is not None else _init_super_block_state(
             len(idxs), n)
         while True:
@@ -429,6 +451,8 @@ def evaluate_level_distributed(
             timed_out = True
             break
         sups = last.supports()
+        last_max = (last.max_count if last.max_count is not None
+                    else np.zeros(len(idxs), np.int64))
         got = [
             batched_lib.PatternOutcome(
                 support=int(sups[j]),
@@ -436,6 +460,7 @@ def evaluate_level_distributed(
                 embeddings_found=int(last.found[j]),
                 overflowed=bool(last.overflowed[j]),
                 blocks_run=int(last.blocks_run[j]),
+                max_count=int(last_max[j]),
             )
             for j in range(len(idxs))
         ]
@@ -444,6 +469,10 @@ def evaluate_level_distributed(
         if hooks is not None:
             hooks.on_group_done(k, lo, idxs, got, int(last.dispatches))
     assert timed_out or all(o is not None for o in outcomes)
+    for o in outcomes:
+        if o is not None:
+            telemetry.max_count = max(telemetry.max_count, o.max_count)
+            telemetry.overflowed |= o.overflowed
     return outcomes, timed_out, telemetry
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -23,6 +23,8 @@ from .canonical import canonical_key, dedupe_patterns
 from .generation import edge_extension_candidates, generate_new_patterns
 from .matcher import MatchConfig, match_block, transient_match_bytes
 from .plan import make_plan
+from .planner import CostModel, ExecutionPlanner, LevelPlan
+from . import planner as planner_lib
 from . import batched as batched_lib
 from . import mis as mis_lib
 from . import metrics as metrics_lib
@@ -32,7 +34,8 @@ __all__ = ["MiningConfig", "MiningLoopState", "PatternStats", "MiningResult",
 
 _METRICS = ("mis", "mis_luby", "mni", "frac", "mis_exact")
 _GENERATION = ("merge", "edge_ext")
-_EXECUTION = ("batched", "sequential", "distributed")
+_EXECUTION = ("auto", "batched", "sequential", "distributed")
+_ROOT_ORDERS = ("degree", "vertex")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,13 +48,17 @@ class MiningConfig:
     complete: bool = False         # disable τ early exit (exact metric values)
     time_limit_s: Optional[float] = None
     match: MatchConfig = dataclasses.field(default_factory=MatchConfig)
-    # data plane: "batched" stacks each same-k candidate group of a level
-    # into one vmapped device program; "sequential" is the paper's
-    # one-pattern-at-a-time loop, kept as the equivalence oracle;
+    # data plane: "auto" (default) consults the execution planner
+    # (`core/planner.py`) per level — cost-model plane choice, bucket
+    # sizing, and occupancy-derived matcher geometry, with every decision
+    # recorded in per_level["plan"]; "batched" stacks each same-k candidate
+    # group of a level into one vmapped device program; "sequential" is the
+    # paper's one-pattern-at-a-time loop, kept as the equivalence oracle;
     # "distributed" shards match roots over every local device (shard_map,
     # `core/distributed.py`) — Luby semantics, so metric must be mis_luby.
-    # (mis_exact always takes the sequential path — its MIS solve is host-side.)
-    execution: str = "batched"
+    # (mis_exact always takes the sequential path — its MIS solve is
+    # host-side, though its embedding collection is block-batched.)
+    execution: str = "auto"
     # ceiling on the pattern axis of one batched program (transient device
     # memory is O(batch · cap · chunk); bigger levels are sliced)
     batch_patterns: int = 64
@@ -59,7 +66,16 @@ class MiningConfig:
     # fixes the early-exit/accounting schedule independent of the mesh
     # shape, which is what lets a checkpointed run resume on a different
     # device count bit-identically.  None = current device count (legacy).
+    # (Under execution="auto" the planner only *considers* the distributed
+    # plane when this is set — an unpinned schedule is mesh-dependent.)
     blocks_per_super: Optional[int] = None
+    # root-block schedule: "degree" dispatches blocks in descending
+    # max-out-degree order so high-yield roots run first and τ early exit
+    # fires sooner; "vertex" is the legacy vertex-id order.  The schedule
+    # is shared by every plane and is part of the session fingerprint —
+    # completed metric values are deterministic *within* a schedule
+    # (mIS priority = embedding-row order along it).
+    root_order: str = "degree"
 
     def __post_init__(self):
         if self.metric not in _METRICS:
@@ -76,6 +92,8 @@ class MiningConfig:
             raise ValueError("batch_patterns must be >= 1")
         if self.blocks_per_super is not None and self.blocks_per_super < 1:
             raise ValueError("blocks_per_super must be >= 1 (or None)")
+        if self.root_order not in _ROOT_ORDERS:
+            raise ValueError(f"root_order must be one of {_ROOT_ORDERS}")
         if not (0.0 <= self.lam <= 1.0):
             raise ValueError("lambda (slider) must be in [0, 1]")
 
@@ -89,6 +107,12 @@ class PatternStats:
     embeddings_found: int
     overflowed: bool
     blocks_run: int
+    # peak frontier occupancy over the blocks this pattern ran (≤ cap) —
+    # surfaced per level as per_level["max_count"], the planner's input
+    max_count: int = 0
+    # device program invocations (== blocks_run except where a dispatch
+    # covers several blocks, e.g. mis_exact's batched embedding collection)
+    dispatches: int = 0
 
 
 @dataclasses.dataclass
@@ -97,9 +121,13 @@ class MiningResult:
     searched: int                       # candidate patterns evaluated (Table 2)
     # per level: candidates/searched/pruned/frequent counts plus telemetry —
     # "dispatches" (device program invocations; deterministic, carried
-    # across a session resume) and "wall_s" (wall clock spent on the level
-    # *in this process*; excluded from resume bit-identity comparisons)
-    per_level: Dict[int, Dict[str, float]]
+    # across a session resume), "max_count"/"overflowed" (peak frontier
+    # occupancy across the level's patterns and whether any hit the cap —
+    # the planner's geometry inputs), "plan" (the planner's recorded
+    # decision dict, present under execution="auto") and "wall_s" (wall
+    # clock spent on the level *in this process*; excluded from resume
+    # bit-identity comparisons)
+    per_level: Dict[int, Dict[str, Any]]
     stats: List[PatternStats]
     elapsed_s: float
     timed_out: bool
@@ -121,7 +149,7 @@ class MiningLoopState:
     cp: List[Pattern]                   # candidates of the next level
     frequent: List[Tuple[Pattern, int]]
     stats: List[PatternStats]
-    per_level: Dict[int, Dict[str, float]]
+    per_level: Dict[int, Dict[str, Any]]
     searched: int
     peak_bytes: int
     elapsed_s: float                    # wall time consumed up to the snapshot
@@ -165,33 +193,59 @@ def evaluate_pattern(
     pat: Pattern,
     tau: int,
     cfg: MiningConfig,
+    *,
+    match_cfg: Optional[MatchConfig] = None,
+    block_order: Optional[np.ndarray] = None,
 ) -> PatternStats:
-    """Metric step for one candidate: stream root blocks until τ or done."""
-    mcfg = cfg.match
+    """Metric step for one candidate: stream root blocks until τ or done.
+
+    ``match_cfg`` overrides ``cfg.match`` (the planner's per-level
+    geometry); ``block_order`` is the static root-block schedule (a
+    permutation of block ids; None = vertex-id order).  ``mis_exact``
+    collects embeddings with the block-batched device collector
+    (`batched.collect_pattern_embeddings`) — same per-block results, far
+    fewer dispatches — and solves MIS exactly on host.
+    """
+    mcfg = cfg.match if match_cfg is None else match_cfg
     plan = make_plan(pat, host_g)
     k = pat.k
     n = host_g.n
     metric = cfg.metric
     early_exit_tau = jnp.int32(np.iinfo(np.int32).max if cfg.complete else tau)
+    n_blocks = -(-n // mcfg.root_block)
+    if block_order is None:
+        block_order = np.arange(n_blocks, dtype=np.int64)
+
+    if metric == "mis_exact":
+        embs, found_total, overflowed, blocks, peak, dispatches = \
+            batched_lib.collect_pattern_embeddings(
+                dev_g, plan, mcfg, n, block_order=block_order)
+        support = metrics_lib.exact_mis(embs)
+        return PatternStats(
+            pattern=pat, support=support, tau=tau,
+            frequent=support >= tau, embeddings_found=found_total,
+            overflowed=overflowed, blocks_run=blocks,
+            max_count=peak, dispatches=dispatches)
 
     if metric in ("mis", "mis_luby"):
         state = (mis_lib.bitmap_init(n), jnp.int32(0))
     elif metric == "mni":
         state = metrics_lib.mni_init(k, n)
-    elif metric == "frac":
+    else:  # frac
         state = metrics_lib.frac_init(k, n)
-    else:  # mis_exact
-        state = []
 
     found_total = 0
     overflowed = False
     blocks = 0
-    n_blocks = -(-n // mcfg.root_block)
+    max_count = 0
     for b in range(n_blocks):
-        emb, count, found, ovf = match_block(dev_g, plan, jnp.int32(b * mcfg.root_block), mcfg)
+        emb, count, found, ovf, peak = match_block(
+            dev_g, plan, jnp.int32(int(block_order[b]) * mcfg.root_block),
+            mcfg)
         blocks += 1
         found_total += int(found)
         overflowed |= bool(ovf)
+        max_count = max(max_count, int(peak))
         if metric == "mis":
             state = mis_lib.mis_greedy_update(state[0], state[1], emb, count, early_exit_tau, k)
             if not cfg.complete and int(state[1]) >= tau:
@@ -204,22 +258,15 @@ def evaluate_pattern(
             state = metrics_lib.mni_update(state, emb, count, k)
             if not cfg.complete and int(metrics_lib.mni_value(state)) >= tau:
                 break
-        elif metric == "frac":
+        else:  # frac
             state = metrics_lib.frac_update(state, emb, count, k)
-        else:  # mis_exact — collect embeddings to host
-            c = int(count)
-            if c:
-                state.append(np.asarray(emb[:c]))
 
     if metric in ("mis", "mis_luby"):
         support = int(state[1])
     elif metric == "mni":
         support = int(metrics_lib.mni_value(state))
-    elif metric == "frac":
-        support = int(math.floor(float(metrics_lib.frac_value(state))))
     else:
-        embs = np.concatenate(state, axis=0) if state else np.zeros((0, k), np.int32)
-        support = metrics_lib.exact_mis(embs)
+        support = int(math.floor(float(metrics_lib.frac_value(state))))
 
     return PatternStats(
         pattern=pat,
@@ -229,18 +276,23 @@ def evaluate_pattern(
         embeddings_found=found_total,
         overflowed=overflowed,
         blocks_run=blocks,
+        max_count=max_count,
+        dispatches=blocks,
     )
 
 
-def _device_bytes(cfg: MiningConfig, k: int, n: int) -> int:
-    mcfg = cfg.match
+def _device_bytes(mcfg: MatchConfig, metric: str, k: int, n: int) -> int:
     graphless = transient_match_bytes(mcfg, k)
-    if cfg.metric in ("mis", "mis_luby"):
-        graphless += ((n + 31) // 32) * 4 + (n * 4 if cfg.metric == "mis_luby" else 0)
-    elif cfg.metric == "mni":
+    if metric in ("mis", "mis_luby"):
+        graphless += ((n + 31) // 32) * 4 + (n * 4 if metric == "mis_luby" else 0)
+    elif metric == "mni":
         graphless += k * n
-    elif cfg.metric == "frac":
+    elif metric == "frac":
         graphless += k * n * 4
+    elif metric == "mis_exact":
+        # block-batched embedding collection stacks whole blocks' transient
+        # state on the vmapped leading axis
+        graphless *= batched_lib.MIS_EXACT_BLOCKS_PER_DISPATCH
     return graphless
 
 
@@ -272,7 +324,7 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
     if resume is None:
         frequent: List[Tuple[Pattern, int]] = []
         all_stats: List[PatternStats] = []
-        per_level: Dict[int, Dict[str, float]] = {}
+        per_level: Dict[int, Dict[str, Any]] = {}
         searched = 0
         peak_bytes = graph_bytes
         timed_out = False
@@ -294,8 +346,25 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
     searched_keys = {canonical_key(st.pattern) for st in all_stats}
     mis_mode = cfg.metric in ("mis", "mis_luby", "mis_exact")
 
-    use_batched = cfg.execution == "batched" and cfg.metric != "mis_exact"
-    use_distributed = cfg.execution == "distributed"
+    # the execution planner: forced modes pass through it unchanged, "auto"
+    # applies the calibrated cost model per level; every plane walks the
+    # planner's static root-block schedule (cfg.root_order)
+    import jax
+
+    cost = planner_lib.load_calibration()
+    n_devices = jax.local_device_count()
+    if hooks is not None and hasattr(hooks, "pin_calibration"):
+        # sessions pin the planner inputs in the snapshot so a resume on a
+        # machine with a different calibration file — or a different
+        # device count — replans identically (CostModel.from_dict ignores
+        # the extra n_devices key)
+        pinned = hooks.pin_calibration(
+            {**cost.to_dict(), "n_devices": n_devices})
+        cost = CostModel.from_dict(pinned)
+        n_devices = int(pinned.get("n_devices", n_devices))
+    planner = ExecutionPlanner(g, cfg, cost_model=cost,
+                               n_devices=n_devices)
+    block_order = planner.block_order
     deadline = (None if cfg.time_limit_s is None
                 else t0 + max(cfg.time_limit_s - elapsed0, 0.0))
 
@@ -315,6 +384,8 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
         lvl_searched = 0
         lvl_pruned = 0
         lvl_dispatches = 0
+        lvl_max_count = 0
+        lvl_overflowed = False
         eval_pats: List[Pattern] = []
         eval_taus: List[int] = []
         for pat in cp:
@@ -329,22 +400,44 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
             eval_pats.append(pat)
             eval_taus.append(tau)
 
-        if (use_batched or use_distributed) and eval_pats:
-            if use_distributed:
+        # plan the level: a mid-level resume replays the recorded decision
+        # (calibration drift between processes must not move the plan);
+        # otherwise the planner decides from the previous level's telemetry
+        plan: Optional[LevelPlan] = None
+        if level_hooks is not None:
+            resume_plan = getattr(level_hooks, "resume_plan", None)
+            d = resume_plan() if resume_plan is not None else None
+            if d is not None:
+                plan = LevelPlan.from_dict(d, cfg.match)
+        if plan is None:
+            plan = planner.plan_level(level, eval_pats, eval_taus,
+                                      prev=per_level.get(level - 1))
+        if level_hooks is not None and cfg.execution == "auto":
+            record_plan = getattr(level_hooks, "record_plan", None)
+            if record_plan is not None:
+                record_plan(plan.to_dict())
+        plane = plan.plane if cfg.metric != "mis_exact" else "sequential"
+
+        if plane in ("batched", "distributed") and eval_pats:
+            if plane == "distributed":
                 from . import distributed as distributed_lib
 
                 outcomes, lvl_timed_out, tel = distributed_lib.evaluate_level_distributed(
-                    g, eval_pats, eval_taus, cfg.match,
+                    g, eval_pats, eval_taus, plan.match,
                     complete=cfg.complete, deadline=deadline,
-                    max_batch=cfg.batch_patterns,
-                    blocks_per_super=cfg.blocks_per_super, hooks=level_hooks)
+                    max_batch=plan.max_batch,
+                    blocks_per_super=cfg.blocks_per_super, hooks=level_hooks,
+                    block_order=block_order)
             else:
                 outcomes, lvl_timed_out, tel = batched_lib.evaluate_level_batched(
-                    g, dev_g, eval_pats, eval_taus, cfg.metric, cfg.match,
+                    g, dev_g, eval_pats, eval_taus, cfg.metric, plan.match,
                     complete=cfg.complete, deadline=deadline,
-                    max_batch=cfg.batch_patterns, hooks=level_hooks)
+                    max_batch=plan.max_batch, hooks=level_hooks,
+                    block_order=block_order)
             timed_out |= lvl_timed_out
             lvl_dispatches += tel.dispatches
+            lvl_max_count = max(lvl_max_count, tel.max_count)
+            lvl_overflowed |= tel.overflowed
             peak_bytes = max(peak_bytes, graph_bytes + tel.state_bytes)
             for pat, tau, out in zip(eval_pats, eval_taus, outcomes):
                 if out is None:  # level timed out before this group ran
@@ -357,6 +450,7 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
                     embeddings_found=out.embeddings_found,
                     overflowed=out.overflowed,
                     blocks_run=out.blocks_run,
+                    max_count=out.max_count,
                 )
                 searched += 1
                 lvl_searched += 1
@@ -369,12 +463,19 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
                 if deadline is not None and time.monotonic() > deadline:
                     timed_out = True
                     break
-                st = evaluate_pattern(g, dev_g, pat, tau, cfg)
+                st = evaluate_pattern(g, dev_g, pat, tau, cfg,
+                                      match_cfg=plan.match,
+                                      block_order=block_order)
                 searched += 1
                 lvl_searched += 1
-                lvl_dispatches += st.blocks_run
+                lvl_dispatches += st.dispatches
+                lvl_max_count = max(lvl_max_count, st.max_count)
+                lvl_overflowed |= st.overflowed
                 all_stats.append(st)
-                peak_bytes = max(peak_bytes, graph_bytes + _device_bytes(cfg, pat.k, g.n))
+                peak_bytes = max(
+                    peak_bytes,
+                    graph_bytes + _device_bytes(plan.match, cfg.metric,
+                                                pat.k, g.n))
                 if st.frequent:
                     frequent.append((pat, st.support))
                     level_frequent.append(pat)
@@ -384,8 +485,12 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
             "pruned": lvl_pruned,
             "frequent": len(level_frequent),
             "dispatches": lvl_dispatches,
+            "max_count": int(lvl_max_count),
+            "overflowed": bool(lvl_overflowed),
             "wall_s": time.monotonic() - level_t0,
         }
+        if cfg.execution == "auto":
+            per_level[level]["plan"] = plan.to_dict()
         if timed_out or not level_frequent:
             cp = []
         elif (cfg.generation == "merge"

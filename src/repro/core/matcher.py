@@ -352,7 +352,8 @@ def _expand_level(g: DeviceGraph, plan: PatternPlan, emb, count, level: int,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def match_block(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
-                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                           jnp.ndarray]:
     """Enumerate embeddings rooted in one vertex block.
 
     Args:
@@ -365,7 +366,7 @@ def match_block(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
       block_start: () int32 — first root vertex of this block.
       cfg:  static MatchConfig (hashable; keys the jit cache with k).
 
-    Returns (emb, count, found, overflowed):
+    Returns (emb, count, found, overflowed, peak):
       emb:    (cap, k) int32 — embeddings in pattern-order columns, row-major
               in (root, discovery) order (so row index = greedy priority);
               invalid rows are -1-filled.
@@ -374,13 +375,20 @@ def match_block(g: DeviceGraph, plan: PatternPlan, block_start, cfg: MatchConfig
               capacity clipping.
       overflowed: () bool — some level produced more than `cap` rows (results
               are truncated, never silently wrong).
+      peak:   () int32 — max frontier occupancy over all levels (root level
+              included, post-clip, so ≤ cap).  This is the observed-occupancy
+              signal the execution planner's per-level ``cap`` right-sizing
+              consumes (`core/planner.py`); when `overflowed` is set the true
+              need exceeded `cap` and `peak` is only a lower bound.
     """
     emb, count = _init_roots(g, plan, block_start, cfg)
     found = count
+    peak = count
     overflowed = jnp.bool_(False)
     for level in range(1, plan.k):
         emb, count, lvl_found, lvl_ovf = _expand_level(
             g, plan, emb, count, level, cfg)
         overflowed |= lvl_ovf | (lvl_found > cfg.cap)
         found = lvl_found
-    return emb, count, found, overflowed
+        peak = jnp.maximum(peak, count)
+    return emb, count, found, overflowed, peak

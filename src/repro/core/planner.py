@@ -1,0 +1,426 @@
+"""Adaptive execution planner — cost-model-driven level scheduling.
+
+Every mining level asks the same three questions:
+
+  1. **Which data plane?**  The batched plane (`core/batched.py`) amortizes
+     dispatch + host-sync overhead across a level's candidates and wins
+     ≥2–4× when levels are dispatch-bound; but when a single pattern's
+     block already saturates the device (one pattern, a big ``cap·chunk``
+     grid) it is parity-or-slower than the sequential oracle.  The
+     distributed plane adds the mesh, at collective-latency cost.
+  2. **How wide a pattern bucket?**  Bigger buckets amortize more dispatch
+     overhead but multiply transient device memory.
+  3. **What matcher geometry?**  `MatchConfig.for_graph` is one
+     graph-global guess; actual frontier occupancy is a per-level quantity
+     the previous level already measured (``max_count`` telemetry), so
+     ``cap`` can be right-sized level by level — on compute-bound levels
+     that is directly proportional compute saved.
+
+`ExecutionPlanner` answers all three from a small calibrated cost model
+(`CostModel`: dispatch overhead + per-lane throughput + vmap fusion-loss
+factor — fitted by ``benchmarks/calibrate.py``, loaded from a JSON file
+with safe built-in defaults) plus the level's observable inputs: candidate
+count, per-pattern frontier occupancy of the previous level, and graph
+degree stats.  With ``MiningConfig.execution == "auto"`` (the default)
+`mine()` consults the planner at every level boundary and records the
+decision in ``MiningResult.per_level[level]["plan"]`` and in the session
+snapshot, so a ``--resume`` replays the in-flight level's plan
+bit-identically even if the calibration file changed between processes.
+
+Result-preservation contract (what "auto is bit-identical to every forced
+plane" rests on):
+
+  * plane choice never changes per-pattern results — that is the batched ≡
+    sequential equivalence contract, property-tested since PR 1;
+  * ``cap`` right-sizing preserves results whenever no level overflows the
+    derived cap (truncation is the *only* cap-dependent behaviour, and it
+    is always flagged via ``overflowed``); the planner therefore only
+    shrinks with ≥``CAP_HEADROOM``× headroom over the observed peak, never
+    below ``CAP_FLOOR``, and not at all when the previous level overflowed;
+  * ``chunk``/``max_chunks`` are **never** changed when ``max_chunks > 1``:
+    survivors are packed in (chunk, row, position) order, so re-chunking a
+    multi-chunk gather would permute embedding priority and with it the
+    greedy-mIS selection.  When one chunk already covers the max degree the
+    order is plain row-major and shrinking ``chunk`` is order-preserving;
+  * ``two_phase`` toggling preserves results absent overflow (same
+    survivors, same packing order — `tests/kernels` pin this).
+
+**Degree-ordered root blocks** (`root_block_order`): root blocks are
+dispatched in descending max-out-degree order instead of vertex-id order.
+High-yield roots are matched first, so the τ early-exit in ``mis`` /
+``mis_luby`` fires after fewer blocks.  The permutation is a static
+function of (graph, root_block, ``MiningConfig.root_order``): it is the
+*schedule*, shared verbatim by all three planes (which keeps them
+bit-identical to each other) and part of the session config fingerprint
+(which keeps resumes bit-identical).  Completed metric values remain
+deterministic because mIS priority is embedding-row order *within* the
+chosen schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batched import _bucket_size as _pow2_ceil
+from .graph import DataGraph
+from .matcher import MatchConfig
+
+__all__ = [
+    "CostModel", "LevelPlan", "ExecutionPlanner", "root_block_order",
+    "DEFAULT_CALIBRATION_FILE", "load_calibration",
+]
+
+# calibration file the planner looks for (cwd-relative; override with the
+# REPRO_PLANNER_CALIBRATION env var).  Written by `benchmarks/calibrate.py`.
+DEFAULT_CALIBRATION_FILE = "planner_calibration.json"
+CALIBRATION_ENV = "REPRO_PLANNER_CALIBRATION"
+CALIBRATION_SCHEMA = 1
+
+# cap right-sizing safety rails (see module docstring / docs/architecture.md)
+CAP_HEADROOM = 4        # derived cap ≥ headroom × observed peak occupancy
+CAP_FLOOR = 1024        # never shrink below this many frontier rows
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Three-term linear device-step model, plus the vmap fusion tax.
+
+    One batched step over a bucket of P same-k patterns costs
+
+        dispatch_overhead_s
+          + P · (lanes(cfg, k) · lane_time_s + cap · row_time_s)
+              · (vmap_factor if P > 1 else 1)
+
+    with two distinct work terms — they scale differently and conflating
+    them is exactly the miscalibration that flips plane decisions:
+
+      * ``lanes · lane_time_s`` — the expansion grid:
+        ``(k−1) · cap · chunk · max_chunks`` candidate lanes, each paying
+        the gather/mask/compact pipeline;
+      * ``cap · row_time_s`` — the per-frontier-row metric update (the
+        greedy-mIS ``lax.scan`` walks every row of the frontier table;
+        dominant on CPU where scan iteration overhead is large).
+
+    ``dispatch_overhead_s`` is everything a step pays regardless of
+    geometry: program dispatch, host↔device sync, the host loop's python
+    bookkeeping.  ``vmap_factor ≥ 1`` is the measured per-lane slowdown
+    of the vmapped program vs the unbatched one (XLA loses cross-op
+    fusion on wide batched grids; see docs/architecture.md "Why the
+    vmapped matcher loses fusion").  The sequential plane pays the
+    overhead once per pattern per block with no vmap tax.
+
+    Constants are fitted on the ``mis`` step (the production metric) by
+    ``benchmarks/calibrate.py`` and shared across metrics — the model
+    prices *relative* plane/bucket choices, not absolute runtimes.
+    Defaults are conservative CPU numbers.
+    """
+
+    dispatch_overhead_s: float = 2.0e-3
+    lane_time_s: float = 2.0e-9
+    row_time_s: float = 4.0e-6
+    vmap_factor: float = 1.15
+    source: str = "defaults"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": CALIBRATION_SCHEMA,
+            "dispatch_overhead_s": self.dispatch_overhead_s,
+            "lane_time_s": self.lane_time_s,
+            "row_time_s": self.row_time_s,
+            "vmap_factor": self.vmap_factor,
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CostModel":
+        base = cls()
+        try:
+            return cls(
+                dispatch_overhead_s=float(
+                    d.get("dispatch_overhead_s", base.dispatch_overhead_s)),
+                lane_time_s=float(d.get("lane_time_s", base.lane_time_s)),
+                row_time_s=float(d.get("row_time_s", base.row_time_s)),
+                vmap_factor=max(1.0, float(d.get("vmap_factor",
+                                                 base.vmap_factor))),
+                source=str(d.get("source", "file")),
+            )
+        except (TypeError, ValueError):
+            return base
+
+    def lanes(self, cfg: MatchConfig, k: int) -> int:
+        return max(1, (k - 1)) * cfg.cap * cfg.chunk * cfg.max_chunks
+
+    def pattern_work_s(self, cfg: MatchConfig, k: int) -> float:
+        """Device work of ONE pattern's block step (no overhead/tax)."""
+        return (self.lanes(cfg, k) * self.lane_time_s
+                + cfg.cap * self.row_time_s)
+
+    def block_step_s(self, cfg: MatchConfig, k: int, bucket: int,
+                     *, batched: bool) -> float:
+        """Predicted wall time of ONE device step over one root block."""
+        factor = self.vmap_factor if (batched and bucket > 1) else 1.0
+        return (self.dispatch_overhead_s
+                + bucket * self.pattern_work_s(cfg, k) * factor)
+
+
+def load_calibration(path: Optional[str] = None) -> CostModel:
+    """Load the fitted `CostModel`, falling back to safe defaults.
+
+    Search order: explicit ``path`` (exclusively, when given) →
+    ``$REPRO_PLANNER_CALIBRATION`` → ``./planner_calibration.json``.  A
+    missing or malformed file is never an error — the planner must work
+    out of the box.
+    """
+    env = os.environ.get(CALIBRATION_ENV)
+    candidates = [path] if path is not None else [env,
+                                                  DEFAULT_CALIBRATION_FILE]
+    # the cwd default may legitimately be absent; an *explicitly requested*
+    # file (argument or env var) that can't be used deserves a warning —
+    # silently planning with different constants than asked for is worse
+    # than noise on stderr
+    explicit = {c for c in (path, env) if c}
+    for cand in candidates:
+        if not cand:
+            continue
+        problem = None
+        p = Path(cand)
+        if not p.is_file():
+            problem = "not found"
+        else:
+            try:
+                d = json.loads(p.read_text())
+            except (OSError, ValueError) as e:
+                problem, d = f"unreadable ({e})", None
+            if d is not None and d.get("schema") != CALIBRATION_SCHEMA:
+                problem = (f"schema {d.get('schema')!r} != "
+                           f"{CALIBRATION_SCHEMA}")
+        if problem is not None:
+            if cand in explicit:
+                # do NOT fall through to whatever file happens to sit in
+                # cwd — the user asked for this one specifically
+                print(f"[planner] ignoring calibration {cand}: {problem}; "
+                      f"using built-in defaults", file=sys.stderr)
+                return CostModel()
+            continue
+        d.setdefault("source", str(p))
+        return CostModel.from_dict(d)
+    return CostModel()
+
+
+# ---------------------------------------------------------------------------
+# root-block schedule
+# ---------------------------------------------------------------------------
+
+def root_block_order(g: DataGraph, root_block: int,
+                     mode: str = "degree") -> np.ndarray:
+    """Static permutation of root-block ids — the level's block schedule.
+
+    ``"degree"``: blocks sorted by descending max out-degree of their
+    vertices (stable, so ties keep vertex-id order) — high-yield roots run
+    first and τ early-exit terminates levels sooner.  ``"vertex"``: the
+    legacy identity order.  The permutation depends only on
+    (graph, root_block, mode), so every plane — and every resume — walks
+    the identical schedule.
+    """
+    n_blocks = max(1, -(-g.n // root_block))
+    if mode == "vertex" or n_blocks == 1:
+        return np.arange(n_blocks, dtype=np.int64)
+    if mode != "degree":
+        raise ValueError('root_order must be "degree" or "vertex"')
+    deg = np.diff(g.out_indptr).astype(np.int64)
+    padded = np.full(n_blocks * root_block, -1, np.int64)
+    padded[: deg.shape[0]] = deg
+    block_max = padded.reshape(n_blocks, root_block).max(axis=1)
+    # stable descending sort: ties stay in ascending block-id order
+    return np.argsort(-block_max, kind="stable").astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# per-level plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """One level's execution decision (JSON-stable via to/from_dict)."""
+
+    plane: str                 # "sequential" | "batched" | "distributed"
+    match: MatchConfig         # per-level matcher geometry
+    max_batch: int             # pattern-bucket ceiling for level_groups
+
+    def to_dict(self) -> Dict[str, Any]:
+        """The decision as recorded in per_level / session snapshots.
+
+        Ints/bools/strings only, so the dict survives a JSON round-trip
+        unchanged — which is what makes a replayed decision compare equal
+        to the original in the resume bit-identity tests.
+        """
+        m = self.match
+        return {
+            "plane": self.plane,
+            "cap": int(m.cap),
+            "root_block": int(m.root_block),
+            "chunk": int(m.chunk),
+            "max_chunks": int(m.max_chunks),
+            "two_phase": bool(m.two_phase),
+            "max_batch": int(self.max_batch),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any], base: MatchConfig) -> "LevelPlan":
+        """Rebuild a recorded decision on top of the run's base geometry."""
+        match = dataclasses.replace(
+            base,
+            cap=int(d["cap"]),
+            root_block=int(d["root_block"]),
+            chunk=int(d["chunk"]),
+            max_chunks=int(d["max_chunks"]),
+            two_phase=bool(d["two_phase"]),
+        )
+        return cls(plane=str(d["plane"]), match=match,
+                   max_batch=int(d["max_batch"]))
+
+
+class ExecutionPlanner:
+    """Chooses (plane, bucket, geometry) per level for ``mine()``.
+
+    Forced execution modes pass through unchanged (the three planes stay
+    available as oracles); ``"auto"`` applies the cost model.  The planner
+    is pure host arithmetic — it never touches the device — and fully
+    deterministic given (graph, config, cost model), which the session
+    runtime leans on for resume bit-identity (it additionally pins the
+    cost model and the in-flight level's decision in every snapshot).
+    """
+
+    def __init__(self, g: DataGraph, cfg, *,
+                 cost_model: Optional[CostModel] = None,
+                 n_devices: int = 1):
+        self.g = g
+        self.cfg = cfg
+        self.cost = cost_model or load_calibration()
+        self.n_devices = max(1, int(n_devices))
+        self.block_order = root_block_order(
+            g, cfg.match.root_block, getattr(cfg, "root_order", "degree"))
+        self.n_blocks = int(self.block_order.shape[0])
+
+    # -- geometry -----------------------------------------------------------
+    def derive_match(self, k: int,
+                     prev: Optional[Dict[str, Any]]) -> MatchConfig:
+        """Per-level `MatchConfig` from observed occupancy.
+
+        ``prev`` is the previous level's per_level telemetry dict
+        (``max_count`` / ``overflowed``).  Only result-preserving knobs
+        move (see module docstring): ``cap`` shrinks to
+        pow2(max(CAP_HEADROOM · max_count, CAP_FLOOR)) when the previous
+        level measured small occupancy without overflow, and ``two_phase``
+        is dropped for k == 2 (the only prefix edge is certified by the
+        anchor gather itself, so phase 2 has nothing to prune — the extra
+        compaction is pure overhead).
+        """
+        base = self.cfg.match
+        cap = base.cap
+        if prev is not None and not prev.get("overflowed", False):
+            peak = int(prev.get("max_count", 0))
+            if peak > 0:
+                cap = min(base.cap,
+                          max(_pow2_ceil(CAP_HEADROOM * peak), CAP_FLOOR))
+        two_phase = bool(base.two_phase and k >= 3)
+        if cap == base.cap and two_phase == base.two_phase:
+            return base
+        return dataclasses.replace(base, cap=cap, two_phase=two_phase)
+
+    # -- bucketing ----------------------------------------------------------
+    def choose_bucket(self, n_patterns: int) -> int:
+        """Pattern-bucket ceiling for one level.
+
+        Monotone in ``n_patterns`` (more candidates never picks a smaller
+        bucket — unit-tested) and capped by ``cfg.batch_patterns``, the
+        transient-memory ceiling the config already owns.
+        """
+        if n_patterns <= 1:
+            return 1
+        return int(min(_pow2_ceil(n_patterns), self.cfg.batch_patterns))
+
+    # -- level costs --------------------------------------------------------
+    def _level_costs(self, sizes: List[Tuple[int, int]], match: MatchConfig,
+                     max_batch: int) -> Dict[str, float]:
+        """Predicted per-block cost of one level under each plane.
+
+        ``sizes`` = (group size, k) pairs of the level (mixed-k levels
+        under edge-extension generation contribute one term per group).
+        Costs are per root block — the block count multiplies every plane
+        equally, so it cancels out of the comparison.
+        """
+        seq = bat = 0.0
+        for sz, k in sizes:
+            seq += sz * self.cost.block_step_s(match, k, 1, batched=False)
+            full, rem = divmod(sz, max_batch)
+            for bucket_n in [max_batch] * full + ([rem] if rem else []):
+                # _pow2_ceil IS batched._bucket_size — the estimate prices
+                # the real padded bucket _mine_group will run
+                bat += self.cost.block_step_s(match, k,
+                                              _pow2_ceil(bucket_n),
+                                              batched=True)
+        costs = {"sequential": seq, "batched": bat}
+        if self.n_devices > 1:
+            # roots shard over the mesh: ndev blocks advance per step, at
+            # one extra dispatch-overhead's worth of collective latency
+            costs["distributed"] = (bat + self.cost.dispatch_overhead_s
+                                    ) / self.n_devices
+        return costs
+
+    # -- the decision -------------------------------------------------------
+    def plan_level(self, level: int, patterns: Sequence, taus: Sequence[int],
+                   prev: Optional[Dict[str, Any]] = None) -> LevelPlan:
+        """Plan one level given its candidate set and last level's telemetry.
+
+        Forced execution modes return the config's plane/geometry verbatim.
+        ``"auto"`` derives geometry from ``prev`` (see `derive_match`),
+        sizes the bucket, and picks the cheapest plane under the cost
+        model; ``mis_exact`` always plans sequential (its MIS solve is
+        host-side — though its embedding *collection* is batched over
+        blocks, see `batched.collect_pattern_embeddings`).  The
+        distributed plane is only eligible when the caller pinned a
+        mesh-invariant super-block schedule (``cfg.blocks_per_super``) and
+        the metric is ``mis_luby`` — without those, auto silently changing
+        accounting granularity would break the forced-plane equivalence.
+        """
+        cfg = self.cfg
+        if cfg.execution != "auto":
+            return LevelPlan(plane=cfg.execution, match=cfg.match,
+                             max_batch=cfg.batch_patterns)
+        if not patterns or cfg.metric == "mis_exact":
+            return LevelPlan(plane="sequential",
+                             match=self.derive_match(
+                                 max((p.k for p in patterns), default=2),
+                                 prev),
+                             max_batch=cfg.batch_patterns)
+
+        match = self.derive_match(max(p.k for p in patterns), prev)
+        # same-k group sizes, mirroring batched.level_groups' slicing
+        by_k: Dict[int, int] = {}
+        for p in patterns:
+            by_k[p.k] = by_k.get(p.k, 0) + 1
+        max_batch = self.choose_bucket(max(by_k.values()))
+        sizes = sorted(by_k.items())
+        costs = self._level_costs([(sz, k) for k, sz in sizes], match,
+                                  max_batch)
+
+        plane = "sequential" if costs["sequential"] <= costs["batched"] \
+            else "batched"
+        if ("distributed" in costs
+                and cfg.metric == "mis_luby"
+                and cfg.blocks_per_super is not None
+                and self.n_blocks >= 2 * self.n_devices
+                and costs["distributed"] < costs[plane]):
+            plane = "distributed"
+        return LevelPlan(plane=plane, match=match, max_batch=max_batch)

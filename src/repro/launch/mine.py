@@ -36,13 +36,25 @@ def main(argv=None) -> int:
                     choices=["mis", "mis_luby", "mni", "frac"])
     ap.add_argument("--generation", default="merge",
                     choices=["merge", "edge_ext"])
-    ap.add_argument("--execution", default="batched",
-                    choices=["batched", "sequential", "distributed"],
-                    help="data plane: one vmapped program per same-k "
-                         "candidate group (batched, default), the paper's "
+    ap.add_argument("--execution", default="auto",
+                    choices=["auto", "batched", "sequential", "distributed"],
+                    help="data plane: cost-model planner picks per level "
+                         "(auto, default; decisions recorded in per_level "
+                         "and --json), one vmapped program per same-k "
+                         "candidate group (batched), the paper's "
                          "per-pattern loop (sequential oracle), or match "
                          "roots sharded over every local device "
                          "(distributed; forces metric=mis_luby)")
+    ap.add_argument("--root-order", default="degree",
+                    choices=["degree", "vertex"],
+                    help="root-block schedule: highest max-out-degree "
+                         "blocks first (degree, default — τ early exit "
+                         "fires sooner) or legacy vertex-id order")
+    ap.add_argument("--calibration", default=None,
+                    help="planner calibration JSON (benchmarks/calibrate.py"
+                         "); default: $REPRO_PLANNER_CALIBRATION, then "
+                         "./planner_calibration.json, then built-in "
+                         "defaults")
     ap.add_argument("--expansion", default="xla",
                     choices=["xla", "pallas"],
                     help="expansion plane inside match_block: per-chunk XLA "
@@ -84,6 +96,12 @@ def main(argv=None) -> int:
         print(f"[mine] execution=distributed forces metric=mis_luby "
               f"(was {args.metric})")
         args.metric = "mis_luby"
+    if args.calibration:
+        import os
+
+        from repro.core.planner import CALIBRATION_ENV
+
+        os.environ[CALIBRATION_ENV] = args.calibration
 
     t0 = time.monotonic()
     g = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
@@ -101,6 +119,7 @@ def main(argv=None) -> int:
         sigma=args.sigma, lam=args.lam, metric=args.metric,
         generation=args.generation, max_pattern_size=args.max_size,
         time_limit_s=args.time_limit, execution=args.execution,
+        root_order=args.root_order,
         match=_dc.replace(
             MatchConfig.for_graph(g, cap=args.cap, expansion=args.expansion),
             pallas_interpret=interpret),

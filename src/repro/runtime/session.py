@@ -72,8 +72,14 @@ class _LevelRecorder:
         self.inflight_key: Optional[Tuple[int, int]] = None
         self.inflight_group: Optional[GroupState] = None
         self.inflight_super: Optional[SuperBlockState] = None
+        self.plan: Optional[dict] = (
+            resume_cursor.plan if resume_cursor else None)
 
     # -- resume side --------------------------------------------------------
+    def resume_plan(self) -> Optional[dict]:
+        """The planner decision recorded for this level, or None (fresh
+        level / forced execution) — `mine()` replays it verbatim."""
+        return self._resume.plan if self._resume is not None else None
     def resume_outcomes(self) -> Optional[Dict[int, PatternOutcome]]:
         if not self.groups_done:
             return None
@@ -91,6 +97,9 @@ class _LevelRecorder:
                 else self._resume.inflight_super)
 
     # -- record side --------------------------------------------------------
+    def record_plan(self, plan: dict) -> None:
+        self.plan = plan
+
     def on_group_state(self, k: int, lo: int, state) -> None:
         self.inflight_key = (k, lo)
         if isinstance(state, SuperBlockState):
@@ -115,6 +124,7 @@ class _LevelRecorder:
             inflight_key=self.inflight_key,
             inflight_group=self.inflight_group,
             inflight_super=self.inflight_super,
+            plan=self.plan,
         )
 
 
@@ -128,6 +138,18 @@ class _SessionHooks:
 
     def loop_resume(self) -> Optional[MiningLoopState]:
         return self._resume.loop if self._resume is not None else None
+
+    def pin_calibration(self, loaded: dict) -> dict:
+        """Pin the planner's cost model to the session: a fresh run stores
+        the loaded constants in every snapshot; a resumed run returns the
+        stored ones, so replanning is identical across processes even if
+        the calibration file changed in between."""
+        if (self._resume is not None
+                and self._resume.calibration is not None):
+            self._session._calibration = self._resume.calibration
+        else:
+            self._session._calibration = loaded
+        return self._session._calibration
 
     def level_hooks(self, level: int) -> _LevelRecorder:
         cursor = None
@@ -187,6 +209,7 @@ class MiningSession:
         self._updates = 0               # state updates since last snapshot
         self._recorder: Optional[_LevelRecorder] = None
         self._boundary: Optional[MiningLoopState] = None
+        self._calibration: Optional[dict] = None  # pinned planner constants
         self._t0 = 0.0
         self._elapsed0 = 0.0
         self.snapshots_written = 0
@@ -196,6 +219,8 @@ class MiningSession:
         return self._elapsed0 + (time.monotonic() - self._t0)
 
     def _save(self, state: SessionState) -> None:
+        if state.calibration is None:
+            state = dataclasses.replace(state, calibration=self._calibration)
         leaves, extra = encode_session(state, self.cfg.metric)
         extra["fingerprint"] = self._fingerprint
         extra["meta"] = self.meta

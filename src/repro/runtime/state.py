@@ -67,6 +67,8 @@ def _encode_stats(st: PatternStats) -> Dict[str, Any]:
         "embeddings_found": int(st.embeddings_found),
         "overflowed": bool(st.overflowed),
         "blocks_run": int(st.blocks_run),
+        "max_count": int(st.max_count),
+        "dispatches": int(st.dispatches),
     }
 
 
@@ -79,6 +81,8 @@ def _decode_stats(d: Dict[str, Any]) -> PatternStats:
         embeddings_found=d["embeddings_found"],
         overflowed=d["overflowed"],
         blocks_run=d["blocks_run"],
+        max_count=d.get("max_count", 0),
+        dispatches=d.get("dispatches", 0),
     )
 
 
@@ -89,6 +93,7 @@ def _encode_outcome(o: PatternOutcome) -> Dict[str, Any]:
         "embeddings_found": int(o.embeddings_found),
         "overflowed": bool(o.overflowed),
         "blocks_run": int(o.blocks_run),
+        "max_count": int(o.max_count),
     }
 
 
@@ -154,6 +159,11 @@ class LevelCursor:
     # exactly one of these, matching the execution plane:
     inflight_group: Optional[GroupState] = None          # batched
     inflight_super: Optional[SuperBlockState] = None     # distributed
+    # the planner's recorded decision for the in-flight level
+    # (`LevelPlan.to_dict()`; None under forced execution modes) — a
+    # resume replays this instead of re-planning, so calibration drift
+    # between processes cannot move an in-flight level's plan
+    plan: Optional[Dict[str, Any]] = None
 
 
 @dataclasses.dataclass
@@ -163,6 +173,11 @@ class SessionState:
 
     loop: MiningLoopState
     cursor: Optional[LevelCursor] = None
+    # the pinned planner cost model (`CostModel.to_dict()`): the session
+    # stores the constants the run planned with, so a resumed process
+    # replans future levels with the *same* model even if the calibration
+    # file changed (or vanished) in between
+    calibration: Optional[Dict[str, Any]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +204,8 @@ def encode_session(state: SessionState, metric: str,
         "loop": _encode_loop(state.loop),
         "cursor": {"level": state.loop.level, "group": None, "block": None},
     }
+    if state.calibration is not None:
+        extra["calibration"] = state.calibration
     if state.cursor is None:
         extra["pytree"] = {"kind": "none", "n_leaves": 0}
         return leaves, extra
@@ -206,12 +223,15 @@ def encode_session(state: SessionState, metric: str,
         ],
         "inflight_key": (list(cur.inflight_key)
                          if cur.inflight_key is not None else None),
+        "plan": cur.plan,
     }
     extra["cursor"]["level"] = cur.level
     if cur.inflight_group is not None:
         gs = cur.inflight_group
         devstate = gs.state if _mis_state(metric) else (gs.state,)
         leaves = [np.asarray(leaf) for leaf in devstate]
+        gs_max = (gs.max_count if gs.max_count is not None
+                  else np.zeros_like(gs.supports))
         c["inflight"] = {
             "plane": "batched",
             "next_block": int(gs.next_block),
@@ -221,12 +241,15 @@ def encode_session(state: SessionState, metric: str,
             "overflowed": gs.overflowed.tolist(),
             "blocks_run": gs.blocks_run.tolist(),
             "dispatches": int(gs.dispatches),
+            "max_count": gs_max.tolist(),
         }
         extra["cursor"]["group"] = list(cur.inflight_key)
         extra["cursor"]["block"] = int(gs.next_block)
     elif cur.inflight_super is not None:
         ss = cur.inflight_super
         leaves = [np.asarray(ss.bitmaps), np.asarray(ss.counts)]
+        ss_max = (ss.max_count if ss.max_count is not None
+                  else np.zeros_like(ss.found))
         c["inflight"] = {
             "plane": "distributed",
             "next_block": int(ss.next_block),
@@ -235,6 +258,7 @@ def encode_session(state: SessionState, metric: str,
             "blocks_run": ss.blocks_run.tolist(),
             "super_blocks_run": int(ss.super_blocks_run),
             "dispatches": int(ss.dispatches),
+            "max_count": ss_max.tolist(),
         }
         extra["cursor"]["group"] = list(cur.inflight_key)
         extra["cursor"]["block"] = int(ss.next_block)
@@ -255,9 +279,10 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
             f"unknown session snapshot format {extra.get('format')!r} "
             f"(this build reads format {FORMAT})")
     loop = _decode_loop(extra["loop"])
+    calibration = extra.get("calibration")
     c = extra.get("level_cursor")
     if c is None:
-        return SessionState(loop=loop)
+        return SessionState(loop=loop, calibration=calibration)
 
     cursor = LevelCursor(
         level=c["level"],
@@ -271,6 +296,7 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
         ],
         inflight_key=(tuple(c["inflight_key"])
                       if c["inflight_key"] is not None else None),
+        plan=c.get("plan"),
     )
     inflight = c.get("inflight")
     n_leaves = extra["pytree"]["n_leaves"]
@@ -287,6 +313,9 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
             overflowed=np.asarray(inflight["overflowed"], bool),
             blocks_run=np.asarray(inflight["blocks_run"], np.int64),
             dispatches=inflight["dispatches"],
+            max_count=np.asarray(
+                inflight.get("max_count",
+                             [0] * len(inflight["supports"])), np.int64),
         )
     elif inflight is not None and inflight["plane"] == "distributed":
         cursor.inflight_super = SuperBlockState(
@@ -298,5 +327,8 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
             blocks_run=np.asarray(inflight["blocks_run"], np.int64),
             super_blocks_run=inflight["super_blocks_run"],
             dispatches=inflight["dispatches"],
+            max_count=np.asarray(
+                inflight.get("max_count",
+                             [0] * len(inflight["found"])), np.int64),
         )
-    return SessionState(loop=loop, cursor=cursor)
+    return SessionState(loop=loop, cursor=cursor, calibration=calibration)

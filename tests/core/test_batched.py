@@ -46,3 +46,68 @@ def test_stack_plans_shapes():
     stacked = stack_plans(plans)
     assert stacked.anchor_pos.shape == (3, 2)
     assert stacked.check_out.shape == (3, 2, 2)
+
+
+def test_unbatched_step_bit_identical_to_vmapped():
+    """The P=1 no-vmap fast path must return exactly what the vmapped
+    size-1 bucket returns (it replaces it transparently in _mine_group)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.batched import _state_init, _step_fn
+
+    g = rmat_graph(200, 1200, n_labels=2, seed=5, undirected=True)
+    dg = DeviceGraph.from_host(g)
+    cfg = MatchConfig.for_graph(g, cap=512, root_block=64)
+    pat = initial_candidates(g)[0]
+    plans = stack_plans([make_plan(pat, g)])
+    for metric in ("mis", "mis_luby", "mni", "frac"):
+        state = _state_init(metric, 1, pat.k, g.n)
+        taus = jnp.full((1,), 10**6, jnp.int32)
+        outs = {}
+        for unbatched in (False, True):
+            step = _step_fn(metric, pat.k, cfg, unbatched=unbatched)
+            outs[unbatched] = step(dg, plans, jnp.int32(0), state, taus)
+        for a, b in zip(jax.tree_util.tree_leaves(outs[False]),
+                        jax.tree_util.tree_leaves(outs[True])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_collect_pattern_embeddings_matches_per_block_loop():
+    """mis_exact's device half: block-batched collection == the one-block-
+    per-dispatch loop, field for field, for any dispatch width."""
+    import jax.numpy as jnp
+
+    from repro.core.batched import collect_pattern_embeddings
+    from repro.core.matcher import match_block
+
+    g = rmat_graph(150, 900, n_labels=3, seed=8, undirected=True)
+    dg = DeviceGraph.from_host(g)
+    cfg = MatchConfig.for_graph(g, cap=1024, root_block=32)
+    n_blocks = -(-g.n // cfg.root_block)
+    rng = np.random.default_rng(0)
+    order = rng.permutation(n_blocks).astype(np.int64)
+
+    for pat in initial_candidates(g)[:3]:
+        plan = make_plan(pat, g)
+        ref_rows, ref_found, ref_ovf, ref_peak = [], 0, False, 0
+        for b in order:
+            emb, count, found, ovf, peak = match_block(
+                dg, plan, jnp.int32(int(b) * cfg.root_block), cfg)
+            c = int(count)
+            if c:
+                ref_rows.append(np.asarray(emb[:c]))
+            ref_found += int(found)
+            ref_ovf |= bool(ovf)
+            ref_peak = max(ref_peak, int(peak))
+        ref = (np.concatenate(ref_rows, 0) if ref_rows
+               else np.zeros((0, pat.k), np.int32))
+        for width in (1, 3, 8, 64):
+            embs, found, ovf, blocks, peak, dispatches = \
+                collect_pattern_embeddings(
+                    dg, plan, cfg, g.n, block_order=order,
+                    blocks_per_dispatch=width)
+            np.testing.assert_array_equal(embs, ref)
+            assert (found, ovf, blocks, peak) == \
+                (ref_found, ref_ovf, n_blocks, ref_peak)
+            assert dispatches == -(-n_blocks // width)

@@ -18,7 +18,7 @@ def _all_embeddings(g, pat, cfg):
     total_found = 0
     overflow = False
     for b in range(0, g.n, cfg.root_block):
-        emb, count, found, ovf = match_block(dg, plan, jnp.int32(b), cfg)
+        emb, count, found, ovf, _peak = match_block(dg, plan, jnp.int32(b), cfg)
         c = int(count)
         total_found += int(found)
         overflow |= bool(ovf)
@@ -71,10 +71,11 @@ def test_overflow_flag_and_clipping():
     cfg = MatchConfig.for_graph(g, cap=8, root_block=64, chunk=4)
     dg = DeviceGraph.from_host(g)
     plan = make_plan(pat, g)
-    emb, count, found, ovf = match_block(dg, plan, jnp.int32(0), cfg)
+    emb, count, found, ovf, peak = match_block(dg, plan, jnp.int32(0), cfg)
     assert bool(ovf)
     assert int(count) == 8
     assert int(found) == n - 1
+    assert int(peak) == 8  # post-clip peak never exceeds cap
 
 
 def test_edge_exists_bisect():

@@ -1,0 +1,82 @@
+"""The bench-smoke regression gate (scripts/check_bench_regression.py):
+gate semantics on synthetic trajectories + the committed BENCH_smoke.json
+must pass against itself (the no-change CI invariant)."""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+SCRIPT = ROOT / "scripts" / "check_bench_regression.py"
+
+spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                              SCRIPT)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+
+def _traj(rows):
+    return {"schema": 1, "rows": rows}
+
+
+def _row(name, us, parity=None):
+    return {"name": name, "us_per_call": us, "derived": parity,
+            "parity": parity}
+
+
+def test_gate_blocks_regression_and_missing_rows():
+    base = _traj([_row("exec_time/batched_level/n2000/P16", 100.0),
+                  _row("exec_time/gnutella/s6/flexis_0.4", 200.0),
+                  _row("exec_time/planner/compute_bound_P1/n2000", 50.0)])
+    # within 1.3x everywhere → OK
+    ok = _traj([_row("exec_time/batched_level/n2000/P16", 129.0),
+                _row("exec_time/gnutella/s6/flexis_0.4", 10.0),
+                _row("exec_time/planner/compute_bound_P1/n2000", 500.0)])
+    failures, notes = gate.check(base, ok)
+    assert failures == []
+    assert any("ungated" in n for n in notes)  # planner row slower but free
+
+    # gated row >1.3x slower → fail
+    slow = _traj([_row("exec_time/batched_level/n2000/P16", 131.0),
+                  _row("exec_time/gnutella/s6/flexis_0.4", 200.0),
+                  _row("exec_time/planner/compute_bound_P1/n2000", 50.0)])
+    failures, _ = gate.check(base, slow)
+    assert len(failures) == 1 and "SLOWER" in failures[0]
+
+    # gated row silently dropped → fail; new rows are fine
+    dropped = _traj([_row("exec_time/gnutella/s6/flexis_0.4", 200.0),
+                     _row("exec_time/gnutella/s6/new_variant", 1.0)])
+    failures, notes = gate.check(base, dropped)
+    assert any("MISSING" in f for f in failures)
+    assert any("new row" in n for n in notes)
+
+
+def test_gate_blocks_parity_loss():
+    base = _traj([_row("exec_time/expansion_plane/xla/n1000/P8", 10.0,
+                       parity=1.0)])
+    good = _traj([_row("exec_time/expansion_plane/xla/n1000/P8", 99.0,
+                       parity=1.0)])
+    bad = _traj([_row("exec_time/expansion_plane/xla/n1000/P8", 10.0,
+                      parity=0.0)])
+    assert gate.check(base, good)[0] == []     # parity rows aren't timed
+    failures, _ = gate.check(base, bad)
+    assert len(failures) == 1 and "PARITY" in failures[0]
+
+
+def test_committed_trajectory_passes_against_itself(tmp_path):
+    committed = ROOT / "BENCH_smoke.json"
+    assert committed.is_file()
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), str(committed), str(committed)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_committed_trajectory_has_planner_rows():
+    rows = {r["name"]
+            for r in json.loads((ROOT / "BENCH_smoke.json").read_text())["rows"]}
+    assert any(n.startswith("exec_time/planner/") for n in rows), \
+        "BENCH_smoke.json predates the execution planner — refresh it"
+    assert any(n.startswith("exec_time/batched_level/") for n in rows)

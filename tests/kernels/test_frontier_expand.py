@@ -52,12 +52,15 @@ def _some_plans(g, want=6):
 
 
 def _assert_block_equal(a, b):
-    ea, ca, fa, oa = a
-    eb, cb, fb, ob = b
+    # frontier_expand_level returns 4 fields; match_block appends peak
+    ea, ca, fa, oa, *rest_a = a
+    eb, cb, fb, ob, *rest_b = b
     assert int(ca) == int(cb)
     assert int(fa) == int(fb)
     assert bool(oa) == bool(ob)
     np.testing.assert_array_equal(np.asarray(ea), np.asarray(eb))
+    for ra, rb in zip(rest_a, rest_b):
+        assert int(ra) == int(rb)
 
 
 # ---------------------------------------------------------------------------

@@ -154,11 +154,15 @@ def test_fingerprint_mismatch_refuses_resume(tmp_path):
 
 @pytest.mark.parametrize("metric,kw", [
     # complete=True maximizes block count → most mid-pattern snapshots
+    # (plane pinned: on this tiny config the auto planner legitimately
+    # picks sequential, which only snapshots at level boundaries)
+    ("mis", dict(complete=True, execution="batched")),
+    # the default auto plane: planner decisions recorded + replayed
     ("mis", dict(complete=True)),
     # early exit exercises the active-set shrink/re-stack snapshots
-    ("mis_luby", dict(sigma=3, lam=0.5)),
-    ("mni", dict(sigma=3, lam=0.5)),
-    ("frac", dict(sigma=2, lam=0.5)),
+    ("mis_luby", dict(sigma=3, lam=0.5, execution="batched")),
+    ("mni", dict(sigma=3, lam=0.5, execution="batched")),
+    ("frac", dict(sigma=2, lam=0.5, execution="batched")),
     # sequential plane: level-boundary snapshots only
     ("mis", dict(sigma=3, lam=0.5, execution="sequential")),
 ])
@@ -185,8 +189,10 @@ def test_resume_bit_identical_at_every_snapshot(tmp_path, metric, kw):
 
 def test_resume_survives_crash_during_save(tmp_path, monkeypatch):
     """A kill *inside* the checkpoint write (tmp written, COMMIT not) must
-    fall back to the previous committed snapshot and still converge."""
-    g, cfg = _graph(), _cfg("mis", complete=True)
+    fall back to the previous committed snapshot and still converge.
+    (Plane pinned to batched: the crash is injected at the 3rd snapshot,
+    which needs the mid-pattern snapshot cadence.)"""
+    g, cfg = _graph(), _cfg("mis", complete=True, execution="batched")
     ref = mine(g, cfg)
 
     sess = MiningSession(g, cfg, tmp_path, checkpoint_every=1, keep_last=100)
@@ -209,6 +215,43 @@ def test_resume_survives_crash_during_save(tmp_path, monkeypatch):
     monkeypatch.undo()
 
     assert ckpt.latest_step(tmp_path) is not None
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1,
+                            keep_last=100).run()
+    assert _norm(resumed) == _norm(ref)
+
+
+def test_resume_pins_planner_calibration(tmp_path, monkeypatch):
+    """A resumed session must replan with the cost model the run STARTED
+    with, even if the calibration file changed between processes — the
+    planner decisions (and with them the whole per_level record) stay
+    bit-identical.  Also checks the in-flight level's plan is snapshotted
+    and replayed verbatim."""
+    import json
+
+    from repro.core.planner import CALIBRATION_ENV
+
+    g, cfg = _graph(), _cfg("mis", complete=True)
+    monkeypatch.delenv(CALIBRATION_ENV, raising=False)
+    ref = mine(g, cfg)
+
+    # kill right after the level-1 boundary snapshot, so the resumed
+    # process must *replan* level 2 itself
+    fired = _killed_session(g, cfg, tmp_path, 1, checkpoint_every=1,
+                            keep_last=100)
+    assert fired
+    # between the kill and the resume, the world learns absurd
+    # overhead-dominated constants under which EVERY multi-pattern level
+    # would flip to the batched plane on a fresh run …
+    crazy = tmp_path / "crazy_calibration.json"
+    crazy.write_text(json.dumps({
+        "schema": 1, "dispatch_overhead_s": 100.0,
+        "lane_time_s": 1e-15, "row_time_s": 1e-15, "vmap_factor": 1.0}))
+    monkeypatch.setenv(CALIBRATION_ENV, str(crazy))
+    fresh = mine(g, cfg)
+    assert any(st["plan"]["plane"] == "batched"
+               for st in fresh.per_level.values())
+    # … but the resumed session replans with the PINNED constants and
+    # reproduces the original run bit-identically, plan records included
     resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1,
                             keep_last=100).run()
     assert _norm(resumed) == _norm(ref)
