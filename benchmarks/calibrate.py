@@ -23,6 +23,13 @@ probes are chosen so each constant is isolated:
     the unbatched work: XLA loses cross-op fusion on batched grids, and
     this tax is what tips compute-bound levels back to sequential.
 
+Schema 2 adds per-metric scan constants: the cap-scaling probe pair is
+re-timed under ``mni``, ``frac`` and ``mis_luby`` (the expansion-grid
+lane term is metric-independent, so the fitted ``lane_time_s`` is
+subtracted as-is) and the residuals land in ``row_time_{mni,frac,luby}_s``
+— `CostModel.row_time(metric)` falls back to the ``mis`` constant for
+anything unprobed, so schema-1 files keep loading.
+
 The result is a tiny JSON (`planner_calibration.json` by default — the
 file `repro.core.planner.load_calibration` picks up from the working
 directory or ``$REPRO_PLANNER_CALIBRATION``).  ``benchmarks/run.py``
@@ -49,7 +56,7 @@ def _time_calls(fn, iters: int) -> float:
 
 
 def fit_cost_model(iters: int = 20) -> dict:
-    """Measure the step program and return a CostModel dict (schema 1)."""
+    """Measure the step program and return a CostModel dict (schema 2)."""
     import dataclasses
 
     import jax
@@ -72,16 +79,17 @@ def fit_cost_model(iters: int = 20) -> dict:
     plans = [make_plan(p, g) for p in pats]
     k = pats[0].k
 
-    def step_time(cap: int, chunk: int, bucket: int) -> float:
+    def step_time(cap: int, chunk: int, bucket: int,
+                  metric: str = "mis") -> float:
         # max_chunks pinned to 1 so lanes == cap·chunk exactly (timing
         # probe only — truncated candidate enumeration is fine here)
         cfg = dataclasses.replace(
             MatchConfig.for_graph(g, cap=cap, root_block=1024),
             chunk=chunk, max_chunks=1, two_phase=False)
-        step = _step_fn("mis", k, cfg, unbatched=bucket == 1)
+        step = _step_fn(metric, k, cfg, unbatched=bucket == 1)
         sel = [plans[i % len(plans)] for i in range(bucket)]
         stacked = stack_plans(sel)
-        state = _state_init("mis", bucket, k, n)
+        state = _state_init(metric, bucket, k, n)
         taus = jnp.full((bucket,), 10**9, jnp.int32)
 
         def call():
@@ -110,11 +118,25 @@ def fit_cost_model(iters: int = 20) -> dict:
     t_vmap4 = step_time(CAP_B, CH_B, 4)
     vmap_factor = max(1.0, (t_vmap4 - overhead) / (4 * work_bb))
 
+    # per-metric scan constants: same cap pair, lane term cancelled with
+    # the mis-fitted lane_time (the expansion grid is metric-independent)
+    lane_delta = (k - 1) * (CAP_B - CAP_S) * CH_S * lane_time
+    metric_rows, metric_probe = {}, {}
+    for metric, key in (("mni", "row_time_mni_s"),
+                        ("frac", "row_time_frac_s"),
+                        ("mis_luby", "row_time_luby_s")):
+        t_s_m = step_time(CAP_S, CH_S, 1, metric)
+        t_b_m = step_time(CAP_B, CH_S, 1, metric)
+        metric_rows[key] = float(
+            max((t_b_m - t_s_m - lane_delta) / (CAP_B - CAP_S), 1e-12))
+        metric_probe[f"t_cap4096_ch4_{metric}"] = round(t_b_m, 6)
+
     return {
         "schema": CALIBRATION_SCHEMA,
         "dispatch_overhead_s": float(overhead),
         "lane_time_s": float(lane_time),
         "row_time_s": float(row_time),
+        **metric_rows,
         "vmap_factor": float(round(vmap_factor, 3)),
         "backend": jax.default_backend(),
         "source": "benchmarks/calibrate.py",
@@ -124,6 +146,7 @@ def fit_cost_model(iters: int = 20) -> dict:
             "t_cap512_ch64": round(t_sb, 6),
             "t_cap4096_ch4": round(t_bs, 6),
             "t_cap4096_ch64_vmap4": round(t_vmap4, 6),
+            **metric_probe,
         },
         # keep the defaults' semantics documented next to the numbers
         "_model": "t_step = dispatch_overhead_s + bucket * ((k-1)*cap*chunk"
@@ -144,6 +167,9 @@ def write_calibration(out: Optional[str] = None, iters: int = 20) -> str:
           f"overhead={model['dispatch_overhead_s'] * 1e6:.0f}us "
           f"lane={model['lane_time_s'] * 1e9:.3f}ns "
           f"row={model['row_time_s'] * 1e6:.3f}us "
+          f"(mni {model['row_time_mni_s'] * 1e6:.3f} / "
+          f"frac {model['row_time_frac_s'] * 1e6:.3f} / "
+          f"luby {model['row_time_luby_s'] * 1e6:.3f}) "
           f"vmap_factor={model['vmap_factor']:.2f}")
     return out
 

@@ -56,7 +56,10 @@ class _RowCollector(io.TextIOBase):
     GFLOP/s, counts …); for the plane-equivalence families
     (``exec_time/expansion_plane/*``, ``kernel/frontier_expand_pallas*``)
     it is the bit-exactness indicator and is surfaced as ``parity``
-    (1.0 = bit-exact), null elsewhere.
+    (1.0 = bit-exact), null elsewhere.  ``exec_time/sampled/*`` rows
+    additionally carry their own ``accuracy`` column (1.0 = frequent set
+    identical to the forced-batched oracle) — persisted so the
+    regression gate can fail on exactness loss, not just latency.
     """
 
     _PARITY_FAMILIES = ("exec_time/expansion_plane/",
@@ -94,12 +97,17 @@ class _RowCollector(io.TextIOBase):
             derived = float("nan")
         derived_ok = derived == derived  # not NaN
         is_parity = row["name"].startswith(self._PARITY_FAMILIES)
-        self.rows.append({
+        entry = {
             "name": row["name"],
             "us_per_call": us,
             "derived": derived if derived_ok else None,
             "parity": derived if (derived_ok and is_parity) else None,
-        })
+        }
+        try:
+            entry["accuracy"] = float(row["accuracy"])
+        except (KeyError, ValueError):
+            pass  # rows without an accuracy column stay schema-compatible
+        self.rows.append(entry)
 
 
 def main(argv=None) -> int:

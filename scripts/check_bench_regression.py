@@ -13,7 +13,10 @@ Gate semantics (the blocking CI bench-smoke job):
   * new rows, faster rows, and rows outside the gated families are
     reported but never fail;
   * parity rows additionally fail on parity != 1.0 (bit-exactness is not
-    a timing and gets no tolerance).
+    a timing and gets no tolerance);
+  * accuracy rows (the sampled plane's exactness-via-escalation contract)
+    fail on accuracy != 1.0 — including rows only present in the FRESH
+    file, so a newly added sampled cell can never land inexact.
 
 Timing families are gated with generous headroom (default 1.3×) because
 CI runners are noisy; the point is catching step-function regressions
@@ -29,6 +32,7 @@ import sys
 DEFAULT_FAMILIES = (
     "exec_time/batched_level/",
     "exec_time/gnutella/",
+    "exec_time/sampled/",
 )
 
 
@@ -54,6 +58,12 @@ def check(baseline: dict, fresh: dict, *, max_ratio: float = 1.3,
                 failures.append(
                     f"PARITY   {name}: parity={f.get('parity')} (want 1.0)")
             continue
+        if b.get("accuracy") is not None or f.get("accuracy") is not None:
+            if f.get("accuracy") != 1.0:
+                failures.append(
+                    f"ACCURACY {name}: accuracy={f.get('accuracy')} "
+                    f"(want 1.0 — sampled plane must match the oracle)")
+            # accuracy rows are still timing-gated below
         bt, ft = b.get("us_per_call"), f.get("us_per_call")
         if not bt or not ft or bt <= 0:
             continue
@@ -64,6 +74,11 @@ def check(baseline: dict, fresh: dict, *, max_ratio: float = 1.3,
         elif ratio > max_ratio:
             notes.append(f"slower (ungated) {line}")
     for name in sorted(set(fresh_rows) - set(base_rows)):
+        f = fresh_rows[name]
+        if f.get("accuracy") is not None and f.get("accuracy") != 1.0:
+            failures.append(
+                f"ACCURACY {name}: accuracy={f.get('accuracy')} "
+                f"(want 1.0 — new sampled rows get no grace period)")
         notes.append(f"new row  {name}")
     return failures, notes
 

@@ -21,8 +21,16 @@ from .planner import (
     CostModel,
     ExecutionPlanner,
     LevelPlan,
+    block_degree_stat,
     load_calibration,
     root_block_order,
+)
+from .sampled import (
+    evaluate_level_sampled,
+    ht_estimate,
+    ht_interval,
+    normal_quantile,
+    systematic_sample,
 )
 from .flexis import (
     MiningConfig,
@@ -42,8 +50,10 @@ __all__ = [
     "core_graphs", "core_groups", "edge_extension_candidates",
     "generate_new_patterns", "size2_patterns",
     "PatternPlan", "make_plan", "MatchConfig", "match_block",
-    "CostModel", "ExecutionPlanner", "LevelPlan", "load_calibration",
-    "root_block_order",
+    "CostModel", "ExecutionPlanner", "LevelPlan", "block_degree_stat",
+    "load_calibration", "root_block_order",
+    "evaluate_level_sampled", "ht_estimate", "ht_interval",
+    "normal_quantile", "systematic_sample",
     "MiningConfig", "MiningResult", "PatternStats", "evaluate_pattern",
     "initial_candidates", "mine", "tau_threshold",
 ]

@@ -241,6 +241,10 @@ class PatternOutcome:
     # max frontier occupancy observed over the blocks this pattern ran
     # (post-clip, ≤ cap) — the planner's per-level cap-sizing input
     max_count: int = 0
+    # sampled plane only: True when `support` is a Horvitz–Thompson
+    # estimate (clamped below τ) rather than an exact count — every exact
+    # plane, and every escalated pattern, reports False
+    estimated: bool = False
 
 
 @dataclasses.dataclass
@@ -261,6 +265,13 @@ class LevelTelemetry:
     dispatches: int = 0           # device program invocations
     max_count: int = 0            # peak frontier occupancy across patterns
     overflowed: bool = False      # any pattern hit the frontier cap
+    # per-root-block peak frontier occupancy, indexed by block id (int64,
+    # length ⌈n/root_block⌉) — the sampled plane's occupancy weights for
+    # the next level's block draw (`core/sampled.py`)
+    block_peaks: Optional[np.ndarray] = None
+    # sampled-plane summary (fraction, escalations, CI widths); None on
+    # the other planes — `mine()` records it as per_level["sampled"]
+    sampled: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -284,6 +295,9 @@ class GroupState:
     blocks_run: np.ndarray        # (P₀,) int64
     dispatches: int = 0
     max_count: Optional[np.ndarray] = None   # (P₀,) int64 peak occupancy
+    # per-block peak occupancy by block id (see LevelTelemetry.block_peaks);
+    # carried so a resumed group reports identical occupancy telemetry
+    block_peaks: Optional[np.ndarray] = None
 
 
 def level_groups(patterns: Sequence[Pattern], max_batch: int):
@@ -314,14 +328,18 @@ def _mine_group(
     resume: Optional[GroupState] = None,
     on_block=None,
     block_order: Optional[np.ndarray] = None,
-) -> Tuple[List[Optional[PatternOutcome]], bool, int]:
+) -> Tuple[List[Optional[PatternOutcome]], bool, int, np.ndarray]:
     """Run one same-k candidate group level-wise; returns
-    (outcomes, timed_out, dispatches).
+    (outcomes, timed_out, dispatches, block_peaks).
 
-    ``block_order`` is the static root-block schedule (a permutation of
-    block ids from `planner.root_block_order`; None = vertex-id order).
+    ``block_order`` is the static root-block schedule — a permutation of
+    block ids from `planner.root_block_order` (None = vertex-id order), or
+    a *subset* of one: the sampled plane (`core/sampled.py`) passes only
+    its drawn blocks, and the loop runs exactly the schedule it is given.
     The loop cursor — including `GroupState.next_block` — indexes into
     the *schedule*, so a resumed run walks the identical permutation.
+    ``block_peaks`` maps block id → peak frontier occupancy over the
+    group's still-live patterns at that block (0 for blocks not run).
 
     Per-pattern histories reproduce the sequential loop exactly: a pattern
     accumulates (found, overflowed, blocks) for precisely the block prefix the
@@ -356,12 +374,14 @@ def _mine_group(
         return jnp.asarray(
             np.where(bucket_map >= 0, dev_tau_full[safe], 0), jnp.int32)
 
+    total_blocks = -(-n // cfg.root_block)
     if resume is None:
         supports = np.zeros(P0, np.int64)
         found = np.zeros(P0, np.int64)
         ovf = np.zeros(P0, bool)
         blocks_run = np.zeros(P0, np.int64)
         max_count = np.zeros(P0, np.int64)
+        block_peaks = np.zeros(total_blocks, np.int64)
         # current bucket: stacked plans + state + map to group idx (-1 = pad)
         P_pad = _bucket_size(P0)
         bucket_map = np.concatenate([np.arange(P0), np.full(P_pad - P0, -1)])
@@ -375,6 +395,9 @@ def _mine_group(
         blocks_run = resume.blocks_run.astype(np.int64).copy()
         max_count = (np.zeros(P0, np.int64) if resume.max_count is None
                      else resume.max_count.astype(np.int64).copy())
+        block_peaks = (np.zeros(total_blocks, np.int64)
+                       if resume.block_peaks is None
+                       else resume.block_peaks.astype(np.int64).copy())
         bucket_map = np.asarray(resume.bucket_map, np.int64).copy()
         state = jax.tree_util.tree_map(jnp.asarray, resume.state)
         start_block = int(resume.next_block)
@@ -385,10 +408,11 @@ def _mine_group(
 
     timed_out = False
     unfinished: set = set()
-    n_blocks = -(-n // cfg.root_block)
     if block_order is None:
-        block_order = np.arange(n_blocks, dtype=np.int64)
-    assert block_order.shape[0] == n_blocks
+        block_order = np.arange(total_blocks, dtype=np.int64)
+    # the schedule may be a subset (sampled plane): the loop length is the
+    # schedule's, not the graph's
+    n_blocks = int(block_order.shape[0])
     # the P=1 bucket compiles without the vmap (fusion win, bit-identical);
     # re-resolved only when a shrink re-stack changes the bucket width
     step = _step_fn(metric, k, cfg, unbatched=bucket_map.size == 1)
@@ -413,6 +437,9 @@ def _mine_group(
         blocks_run[gi] += 1
         max_count[gi] = np.maximum(max_count[gi],
                                    peak_np[live].astype(np.int64))
+        bid = int(block_order[b])
+        block_peaks[bid] = max(block_peaks[bid],
+                               int(peak_np[live].max(initial=0)))
         if metric == "frac":
             supports[gi] = np.floor(values_np[live].astype(np.float64)).astype(np.int64)
         else:
@@ -443,7 +470,8 @@ def _mine_group(
                 next_block=b + 1, bucket_map=bucket_map.copy(), state=state,
                 supports=supports.copy(), found=found.copy(),
                 overflowed=ovf.copy(), blocks_run=blocks_run.copy(),
-                dispatches=dispatches, max_count=max_count.copy()))
+                dispatches=dispatches, max_count=max_count.copy(),
+                block_peaks=block_peaks.copy()))
 
     outcomes: List[Optional[PatternOutcome]] = [
         None if i in unfinished else PatternOutcome(
@@ -456,7 +484,7 @@ def _mine_group(
         )
         for i in range(P0)
     ]
-    return outcomes, timed_out, dispatches
+    return outcomes, timed_out, dispatches, block_peaks
 
 
 def evaluate_level_batched(
@@ -490,11 +518,13 @@ def evaluate_level_batched(
         computed by a previous process (a group is skipped iff every one of
         its indices is present); ``resume_dispatches()``: device dispatches
         already spent on the skipped groups (keeps level telemetry
-        identical across a resume); ``group_resume(k, lo)``: the in-flight
-        `GroupState` for one group, or None; ``on_group_state(k, lo,
-        group_state)``: called after every block of an unfinished group;
-        ``on_group_done(k, lo, idxs, outcomes, dispatches)``: called when a
-        group completes.
+        identical across a resume); ``resume_block_peaks()`` (optional):
+        the per-block occupancy peaks those groups recorded, or None;
+        ``group_resume(k, lo)``: the in-flight `GroupState` for one group,
+        or None; ``on_group_state(k, lo, group_state)``: called after every
+        block of an unfinished group; ``on_group_done(k, lo, idxs,
+        outcomes, dispatches, block_peaks=None)``: called when a group
+        completes.
 
     Candidates are grouped by k — and each group split into ≤ ``max_batch``
     slices to bound transient device memory (peak transient is
@@ -511,8 +541,13 @@ def evaluate_level_batched(
 
     timed_out = False
     telemetry = LevelTelemetry()
+    peaks = np.zeros(-(-host_g.n // cfg.root_block), np.int64)
     if hooks is not None:
         telemetry.dispatches = int(hooks.resume_dispatches())
+        rbp = getattr(hooks, "resume_block_peaks", None)
+        done_peaks = rbp() if rbp is not None else None
+        if done_peaks is not None:
+            peaks = np.maximum(peaks, np.asarray(done_peaks, np.int64))
     for k, lo, idxs in level_groups(patterns, max_batch):
         # state_bytes is pure arithmetic — account skipped groups too, so a
         # resumed level reports the same peak as the uninterrupted one
@@ -530,19 +565,22 @@ def evaluate_level_batched(
         resume = hooks.group_resume(k, lo) if hooks is not None else None
         on_block = (functools.partial(hooks.on_group_state, k, lo)
                     if hooks is not None else None)
-        got, group_timed_out, dispatches = _mine_group(
+        got, group_timed_out, dispatches, group_peaks = _mine_group(
             dev_g, plans, group_taus, metric, cfg,
             complete=complete, n=host_g.n, deadline=deadline,
             resume=resume, on_block=on_block, block_order=block_order)
         telemetry.dispatches += dispatches
+        peaks = np.maximum(peaks, group_peaks)
         for i, out in zip(idxs, got):
             outcomes[i] = out
         if hooks is not None and not group_timed_out:
-            hooks.on_group_done(k, lo, idxs, got, dispatches)
+            hooks.on_group_done(k, lo, idxs, got, dispatches,
+                                block_peaks=[int(x) for x in group_peaks])
         if group_timed_out:
             timed_out = True
             break
     assert timed_out or all(o is not None for o in outcomes)
+    telemetry.block_peaks = peaks
     for o in outcomes:
         if o is not None:
             telemetry.max_count = max(telemetry.max_count, o.max_count)

@@ -26,6 +26,7 @@ from .plan import make_plan
 from .planner import CostModel, ExecutionPlanner, LevelPlan
 from . import planner as planner_lib
 from . import batched as batched_lib
+from . import sampled as sampled_lib
 from . import mis as mis_lib
 from . import metrics as metrics_lib
 
@@ -34,7 +35,7 @@ __all__ = ["MiningConfig", "MiningLoopState", "PatternStats", "MiningResult",
 
 _METRICS = ("mis", "mis_luby", "mni", "frac", "mis_exact")
 _GENERATION = ("merge", "edge_ext")
-_EXECUTION = ("auto", "batched", "sequential", "distributed")
+_EXECUTION = ("auto", "batched", "sequential", "distributed", "sampled")
 _ROOT_ORDERS = ("degree", "vertex")
 
 
@@ -58,6 +59,12 @@ class MiningConfig:
     # `core/distributed.py`) — Luby semantics, so metric must be mis_luby.
     # (mis_exact always takes the sequential path — its MIS solve is
     # host-side, though its embedding collection is block-batched.)
+    # "sampled" (`core/sampled.py`) runs a weighted root-block sample per
+    # level, estimates support Horvitz–Thompson-style, and escalates every
+    # pattern whose confidence interval reaches τ to the exact batched
+    # plane — the frequent set and its supports stay bit-identical to
+    # forced batched while clearly-infrequent patterns are priced at the
+    # sample fraction.
     execution: str = "auto"
     # ceiling on the pattern axis of one batched program (transient device
     # memory is O(batch · cap · chunk); bigger levels are sliced)
@@ -76,6 +83,14 @@ class MiningConfig:
     # completed metric values are deterministic *within* a schedule
     # (mIS priority = embedding-row order along it).
     root_order: str = "degree"
+    # sampled plane knobs (ignored by every other execution mode).  All
+    # four join the session config fingerprint, so a --resume with a
+    # different sample schedule raises SessionMismatch instead of silently
+    # mixing two different draws.
+    sample_fraction: float = 0.25   # target fraction of root blocks drawn
+    confidence: float = 0.95        # nominal CI level for the estimator
+    sample_seed: int = 0            # RNG key root for the per-level draws
+    escalate: bool = True           # False = pure estimates (no exactness)
 
     def __post_init__(self):
         if self.metric not in _METRICS:
@@ -96,6 +111,15 @@ class MiningConfig:
             raise ValueError(f"root_order must be one of {_ROOT_ORDERS}")
         if not (0.0 <= self.lam <= 1.0):
             raise ValueError("lambda (slider) must be in [0, 1]")
+        if self.execution == "sampled" and self.metric == "mis_exact":
+            raise ValueError(
+                'execution="sampled" estimates from block telemetry; '
+                "mis_exact's host-side MIS solve has no batched escalation "
+                "target — use a batchable metric")
+        if not (0.0 < self.sample_fraction <= 1.0):
+            raise ValueError("sample_fraction must be in (0, 1]")
+        if not (0.0 < self.confidence < 1.0):
+            raise ValueError("confidence must be in (0, 1)")
 
 
 @dataclasses.dataclass
@@ -113,6 +137,10 @@ class PatternStats:
     # device program invocations (== blocks_run except where a dispatch
     # covers several blocks, e.g. mis_exact's batched embedding collection)
     dispatches: int = 0
+    # sampled plane only: True when `support` is a Horvitz–Thompson
+    # estimate clamped below τ (never True for a frequent pattern —
+    # escalation recomputes those exactly)
+    estimated: bool = False
 
 
 @dataclasses.dataclass
@@ -412,14 +440,24 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
         if plan is None:
             plan = planner.plan_level(level, eval_pats, eval_taus,
                                       prev=per_level.get(level - 1))
-        if level_hooks is not None and cfg.execution == "auto":
+        if level_hooks is not None and cfg.execution in ("auto", "sampled"):
+            # sampled plans are recorded too: the level's block draw lives
+            # in plan.sample and a resume must replay it, not re-draw it
             record_plan = getattr(level_hooks, "record_plan", None)
             if record_plan is not None:
                 record_plan(plan.to_dict())
         plane = plan.plane if cfg.metric != "mis_exact" else "sequential"
 
-        if plane in ("batched", "distributed") and eval_pats:
-            if plane == "distributed":
+        tel = None
+        if plane in ("batched", "distributed", "sampled") and eval_pats:
+            if plane == "sampled":
+                outcomes, lvl_timed_out, tel = sampled_lib.evaluate_level_sampled(
+                    g, dev_g, eval_pats, eval_taus, cfg.metric, plan.match,
+                    sample=plan.sample, confidence=cfg.confidence,
+                    escalate=cfg.escalate, complete=cfg.complete,
+                    deadline=deadline, max_batch=plan.max_batch,
+                    hooks=level_hooks, block_order=block_order)
+            elif plane == "distributed":
                 from . import distributed as distributed_lib
 
                 outcomes, lvl_timed_out, tel = distributed_lib.evaluate_level_distributed(
@@ -451,6 +489,7 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
                     overflowed=out.overflowed,
                     blocks_run=out.blocks_run,
                     max_count=out.max_count,
+                    estimated=getattr(out, "estimated", False),
                 )
                 searched += 1
                 lvl_searched += 1
@@ -489,8 +528,17 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
             "overflowed": bool(lvl_overflowed),
             "wall_s": time.monotonic() - level_t0,
         }
-        if cfg.execution == "auto":
+        if cfg.execution in ("auto", "sampled"):
             per_level[level]["plan"] = plan.to_dict()
+        if cfg.execution == "sampled":
+            # sampled-only telemetry keys: cross-plane per_level comparisons
+            # (the batched ≡ sequential ≡ auto tests) must not see them
+            if tel is not None and tel.sampled is not None:
+                per_level[level]["sampled"] = tel.sampled
+            if tel is not None and tel.block_peaks is not None:
+                # block-id indexed peak occupancy — next level's draw weights
+                per_level[level]["block_peaks"] = [
+                    int(x) for x in tel.block_peaks]
         if timed_out or not level_frequent:
             cp = []
         elif (cfg.generation == "merge"

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import sys
 from pathlib import Path
@@ -72,19 +73,33 @@ from .graph import DataGraph
 from .matcher import MatchConfig
 
 __all__ = [
-    "CostModel", "LevelPlan", "ExecutionPlanner", "root_block_order",
-    "DEFAULT_CALIBRATION_FILE", "load_calibration",
+    "CostModel", "LevelPlan", "ExecutionPlanner", "block_degree_stat",
+    "root_block_order", "DEFAULT_CALIBRATION_FILE", "load_calibration",
 ]
 
 # calibration file the planner looks for (cwd-relative; override with the
 # REPRO_PLANNER_CALIBRATION env var).  Written by `benchmarks/calibrate.py`.
 DEFAULT_CALIBRATION_FILE = "planner_calibration.json"
 CALIBRATION_ENV = "REPRO_PLANNER_CALIBRATION"
-CALIBRATION_SCHEMA = 1
+# schema 2 added per-metric row times (row_time_{mni,frac,luby}_s); schema-1
+# files (single mis-fitted row_time_s) still load — the missing constants
+# fall back to the shared one
+CALIBRATION_SCHEMA = 2
+CALIBRATION_SCHEMAS = (1, 2)
 
 # cap right-sizing safety rails (see module docstring / docs/architecture.md)
 CAP_HEADROOM = 4        # derived cap ≥ headroom × observed peak occupancy
 CAP_FLOOR = 1024        # never shrink below this many frontier rows
+
+# sampled plane (execution="sampled"): prior on the fraction of a level's
+# batched cost the exact escalation pass re-spends, scaled by the unsampled
+# fraction — the cost-model row for the sample pass prices
+#   f·batched + ESCALATION_PRIOR·(1−f)·batched
+# so fraction 1.0 prices exactly like (and degenerates to) forced batched
+ESCALATION_PRIOR = 0.25
+# below this many root blocks a sample cannot both draw ≥1 block and leave
+# ≥1 out — the plan falls back to the exact batched plane
+MIN_SAMPLED_BLOCKS = 2
 
 
 # ---------------------------------------------------------------------------
@@ -119,16 +134,24 @@ class CostModel:
     vmapped matcher loses fusion").  The sequential plane pays the
     overhead once per pattern per block with no vmap tax.
 
-    Constants are fitted on the ``mis`` step (the production metric) by
-    ``benchmarks/calibrate.py`` and shared across metrics — the model
-    prices *relative* plane/bucket choices, not absolute runtimes.
-    Defaults are conservative CPU numbers.
+    ``row_time_s`` is fitted on the ``mis`` step; the metric scan term is
+    the one constant that genuinely differs across metrics (greedy mIS's
+    ``lax.scan`` vs MNI's scatter-OR vs frac's scatter-add), so schema-2
+    calibrations carry optional per-metric overrides
+    (``row_time_{mni,frac,luby}_s`` — ``row_time(metric)`` resolves them,
+    falling back to the shared constant for schema-1 files and defaults).
+    Everything else is metric-independent: the model prices *relative*
+    plane/bucket choices, not absolute runtimes.  Defaults are
+    conservative CPU numbers.
     """
 
     dispatch_overhead_s: float = 2.0e-3
     lane_time_s: float = 2.0e-9
     row_time_s: float = 4.0e-6
     vmap_factor: float = 1.15
+    row_time_mni_s: Optional[float] = None
+    row_time_frac_s: Optional[float] = None
+    row_time_luby_s: Optional[float] = None
     source: str = "defaults"
 
     def to_dict(self) -> Dict[str, Any]:
@@ -138,12 +161,20 @@ class CostModel:
             "lane_time_s": self.lane_time_s,
             "row_time_s": self.row_time_s,
             "vmap_factor": self.vmap_factor,
+            "row_time_mni_s": self.row_time_mni_s,
+            "row_time_frac_s": self.row_time_frac_s,
+            "row_time_luby_s": self.row_time_luby_s,
             "source": self.source,
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "CostModel":
         base = cls()
+
+        def opt(key: str) -> Optional[float]:
+            v = d.get(key)
+            return None if v is None else float(v)
+
         try:
             return cls(
                 dispatch_overhead_s=float(
@@ -152,6 +183,9 @@ class CostModel:
                 row_time_s=float(d.get("row_time_s", base.row_time_s)),
                 vmap_factor=max(1.0, float(d.get("vmap_factor",
                                                  base.vmap_factor))),
+                row_time_mni_s=opt("row_time_mni_s"),
+                row_time_frac_s=opt("row_time_frac_s"),
+                row_time_luby_s=opt("row_time_luby_s"),
                 source=str(d.get("source", "file")),
             )
         except (TypeError, ValueError):
@@ -160,17 +194,26 @@ class CostModel:
     def lanes(self, cfg: MatchConfig, k: int) -> int:
         return max(1, (k - 1)) * cfg.cap * cfg.chunk * cfg.max_chunks
 
-    def pattern_work_s(self, cfg: MatchConfig, k: int) -> float:
+    def row_time(self, metric: str = "mis") -> float:
+        """The metric-scan constant for ``metric`` (schema-2 override or
+        the shared mis-fitted ``row_time_s``)."""
+        override = {"mni": self.row_time_mni_s,
+                    "frac": self.row_time_frac_s,
+                    "mis_luby": self.row_time_luby_s}.get(metric)
+        return self.row_time_s if override is None else override
+
+    def pattern_work_s(self, cfg: MatchConfig, k: int,
+                       metric: str = "mis") -> float:
         """Device work of ONE pattern's block step (no overhead/tax)."""
         return (self.lanes(cfg, k) * self.lane_time_s
-                + cfg.cap * self.row_time_s)
+                + cfg.cap * self.row_time(metric))
 
     def block_step_s(self, cfg: MatchConfig, k: int, bucket: int,
-                     *, batched: bool) -> float:
+                     *, batched: bool, metric: str = "mis") -> float:
         """Predicted wall time of ONE device step over one root block."""
         factor = self.vmap_factor if (batched and bucket > 1) else 1.0
         return (self.dispatch_overhead_s
-                + bucket * self.pattern_work_s(cfg, k) * factor)
+                + bucket * self.pattern_work_s(cfg, k, metric) * factor)
 
 
 def load_calibration(path: Optional[str] = None) -> CostModel:
@@ -201,9 +244,9 @@ def load_calibration(path: Optional[str] = None) -> CostModel:
                 d = json.loads(p.read_text())
             except (OSError, ValueError) as e:
                 problem, d = f"unreadable ({e})", None
-            if d is not None and d.get("schema") != CALIBRATION_SCHEMA:
-                problem = (f"schema {d.get('schema')!r} != "
-                           f"{CALIBRATION_SCHEMA}")
+            if d is not None and d.get("schema") not in CALIBRATION_SCHEMAS:
+                problem = (f"schema {d.get('schema')!r} not in "
+                           f"{CALIBRATION_SCHEMAS}")
         if problem is not None:
             if cand in explicit:
                 # do NOT fall through to whatever file happens to sit in
@@ -221,6 +264,20 @@ def load_calibration(path: Optional[str] = None) -> CostModel:
 # root-block schedule
 # ---------------------------------------------------------------------------
 
+def block_degree_stat(g: DataGraph, root_block: int) -> np.ndarray:
+    """Per-root-block max out-degree (block-id indexed, int64 ≥ −1).
+
+    The yield proxy shared by the degree schedule (`root_block_order`) and
+    the sampled plane's fallback draw weights (no occupancy telemetry yet
+    at k = 2).
+    """
+    n_blocks = max(1, -(-g.n // root_block))
+    deg = np.diff(g.out_indptr).astype(np.int64)
+    padded = np.full(n_blocks * root_block, -1, np.int64)
+    padded[: deg.shape[0]] = deg
+    return padded.reshape(n_blocks, root_block).max(axis=1)
+
+
 def root_block_order(g: DataGraph, root_block: int,
                      mode: str = "degree") -> np.ndarray:
     """Static permutation of root-block ids — the level's block schedule.
@@ -237,10 +294,7 @@ def root_block_order(g: DataGraph, root_block: int,
         return np.arange(n_blocks, dtype=np.int64)
     if mode != "degree":
         raise ValueError('root_order must be "degree" or "vertex"')
-    deg = np.diff(g.out_indptr).astype(np.int64)
-    padded = np.full(n_blocks * root_block, -1, np.int64)
-    padded[: deg.shape[0]] = deg
-    block_max = padded.reshape(n_blocks, root_block).max(axis=1)
+    block_max = block_degree_stat(g, root_block)
     # stable descending sort: ties stay in ascending block-id order
     return np.argsort(-block_max, kind="stable").astype(np.int64)
 
@@ -254,18 +308,26 @@ class LevelPlan:
     """One level's execution decision (JSON-stable via to/from_dict)."""
 
     plane: str                 # "sequential" | "batched" | "distributed"
+                               # | "sampled"
     match: MatchConfig         # per-level matcher geometry
     max_batch: int             # pattern-bucket ceiling for level_groups
+    # sampled plane only: the level's recorded block draw —
+    # {"fraction", "n_sample", "positions" (schedule indices), "pis"
+    # (inclusion probabilities), "key" (RNG key words), "weights"
+    # ("occupancy" | "degree")}.  Part of to_dict/from_dict, so a resumed
+    # level replays the *identical* sample instead of re-drawing.
+    sample: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         """The decision as recorded in per_level / session snapshots.
 
-        Ints/bools/strings only, so the dict survives a JSON round-trip
-        unchanged — which is what makes a replayed decision compare equal
-        to the original in the resume bit-identity tests.
+        JSON-native values only (the sample dict holds ints/floats/
+        strings), so the dict survives a JSON round-trip unchanged — which
+        is what makes a replayed decision compare equal to the original in
+        the resume bit-identity tests.
         """
         m = self.match
-        return {
+        d = {
             "plane": self.plane,
             "cap": int(m.cap),
             "root_block": int(m.root_block),
@@ -274,6 +336,9 @@ class LevelPlan:
             "two_phase": bool(m.two_phase),
             "max_batch": int(self.max_batch),
         }
+        if self.sample is not None:
+            d["sample"] = self.sample
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any], base: MatchConfig) -> "LevelPlan":
@@ -287,7 +352,7 @@ class LevelPlan:
             two_phase=bool(d["two_phase"]),
         )
         return cls(plane=str(d["plane"]), match=match,
-                   max_batch=int(d["max_batch"]))
+                   max_batch=int(d["max_batch"]), sample=d.get("sample"))
 
 
 class ExecutionPlanner:
@@ -360,16 +425,18 @@ class ExecutionPlanner:
         Costs are per root block — the block count multiplies every plane
         equally, so it cancels out of the comparison.
         """
+        metric = self.cfg.metric
         seq = bat = 0.0
         for sz, k in sizes:
-            seq += sz * self.cost.block_step_s(match, k, 1, batched=False)
+            seq += sz * self.cost.block_step_s(match, k, 1, batched=False,
+                                               metric=metric)
             full, rem = divmod(sz, max_batch)
             for bucket_n in [max_batch] * full + ([rem] if rem else []):
                 # _pow2_ceil IS batched._bucket_size — the estimate prices
                 # the real padded bucket _mine_group will run
                 bat += self.cost.block_step_s(match, k,
                                               _pow2_ceil(bucket_n),
-                                              batched=True)
+                                              batched=True, metric=metric)
         costs = {"sequential": seq, "batched": bat}
         if self.n_devices > 1:
             # roots shard over the mesh: ndev blocks advance per step, at
@@ -395,6 +462,8 @@ class ExecutionPlanner:
         accounting granularity would break the forced-plane equivalence.
         """
         cfg = self.cfg
+        if cfg.execution == "sampled":
+            return self._plan_sampled(level, patterns, taus, prev)
         if cfg.execution != "auto":
             return LevelPlan(plane=cfg.execution, match=cfg.match,
                              max_batch=cfg.batch_patterns)
@@ -424,3 +493,86 @@ class ExecutionPlanner:
                 and costs["distributed"] < costs[plane]):
             plane = "distributed"
         return LevelPlan(plane=plane, match=match, max_batch=max_batch)
+
+    # -- sampled plane ------------------------------------------------------
+    def _plan_sampled(self, level: int, patterns: Sequence,
+                      taus: Sequence[int],
+                      prev: Optional[Dict[str, Any]]) -> LevelPlan:
+        """Draw (and record) one level's root-block sample.
+
+        Forced geometry — ``execution="sampled"`` is an accuracy/latency
+        dial over the *batched* plane, so it keeps the config's match/
+        bucket verbatim (like every forced mode) and only decides the
+        block draw.  The draw is systematic PPS (Madow) over the level's
+        block *schedule*: weights come from the previous level's per-block
+        peak-occupancy telemetry (``prev["block_peaks"]``, block-id
+        indexed, re-ordered by the schedule) with the degree stat as the
+        k = 2 fallback; the single uniform comes from a counter-based
+        generator keyed on (``sample_seed``, level), so the draw is a pure
+        function of (graph, config, level, telemetry) — which is what lets
+        a resume replay it bit-identically from the recorded plan.
+
+        Degenerate cases plan the exact batched plane outright: empty
+        levels, ``complete=True`` (every block must run anyway), and
+        levels with fewer than `MIN_SAMPLED_BLOCKS` blocks.  A fraction
+        that rounds up to full coverage keeps the sampled plane but with a
+        unit-probability sample — `evaluate_level_sampled` recognises it
+        and degenerates to the exact pass with zero escalations.
+        """
+        from . import sampled as sampled_lib
+
+        cfg = self.cfg
+        match, max_batch = cfg.match, cfg.batch_patterns
+        m = self.n_blocks
+        if not patterns or cfg.complete or m < MIN_SAMPLED_BLOCKS:
+            return LevelPlan(plane="batched", match=match,
+                             max_batch=max_batch)
+
+        key = sampled_lib.sample_key(cfg.sample_seed, level)
+        n_sample = max(1, math.ceil(cfg.sample_fraction * m))
+        # cost-model row for the sample pass: f·batched plus the expected
+        # exact re-spend ESCALATION_PRIOR·(1−f)·batched.  With the prior
+        # < 1 this never exceeds the batched row, but the guard keeps the
+        # plane honest should the prior ever be calibrated past 1.
+        by_k: Dict[int, int] = {}
+        for p in patterns:
+            by_k[p.k] = by_k.get(p.k, 0) + 1
+        costs = self._level_costs([(sz, k) for k, sz in sorted(by_k.items())],
+                                  match, self.choose_bucket(max(by_k.values())))
+        f = n_sample / m
+        sampled_cost = costs["batched"] * (f + ESCALATION_PRIOR * (1.0 - f))
+        if sampled_cost > costs["batched"]:
+            return LevelPlan(plane="batched", match=match,
+                             max_batch=max_batch)
+        if n_sample >= m:
+            sample = {"fraction": 1.0, "n_sample": int(m),
+                      "positions": list(range(m)), "pis": [1.0] * m,
+                      "key": key, "weights": "full"}
+            return LevelPlan(plane="sampled", match=match,
+                             max_batch=max_batch, sample=sample)
+
+        peaks = None if prev is None else prev.get("block_peaks")
+        if peaks is not None and len(peaks) == m:
+            # block-id indexed telemetry → schedule order
+            w = np.asarray(peaks, np.float64)[self.block_order]
+            weights_src = "occupancy"
+        else:
+            w = block_degree_stat(
+                self.g, match.root_block).astype(np.float64)[self.block_order]
+            weights_src = "degree"
+        # floor at 1 so zero-yield blocks keep nonzero inclusion probability
+        # (the HT estimator needs pi > 0 everywhere it might observe mass)
+        w = np.maximum(w, 1.0)
+        u = sampled_lib.sample_uniform(key)
+        positions, pis = sampled_lib.systematic_sample(w, n_sample, u)
+
+        sample = {
+            "fraction": float(cfg.sample_fraction),
+            "n_sample": int(positions.shape[0]),
+            "positions": [int(x) for x in positions],
+            "pis": [float(x) for x in pis],
+            "key": key,
+            "weights": weights_src,
+        }
+        return LevelPlan(plane="sampled", match=match, max_batch=max_batch,
+                         sample=sample)

@@ -37,14 +37,29 @@ def main(argv=None) -> int:
     ap.add_argument("--generation", default="merge",
                     choices=["merge", "edge_ext"])
     ap.add_argument("--execution", default="auto",
-                    choices=["auto", "batched", "sequential", "distributed"],
+                    choices=["auto", "batched", "sequential", "distributed",
+                             "sampled"],
                     help="data plane: cost-model planner picks per level "
                          "(auto, default; decisions recorded in per_level "
                          "and --json), one vmapped program per same-k "
                          "candidate group (batched), the paper's "
-                         "per-pattern loop (sequential oracle), or match "
+                         "per-pattern loop (sequential oracle), match "
                          "roots sharded over every local device "
-                         "(distributed; forces metric=mis_luby)")
+                         "(distributed; forces metric=mis_luby), or a "
+                         "weighted root-block sample with exact escalation "
+                         "(sampled; same frequent set as batched — see "
+                         "--sample-fraction/--confidence)")
+    ap.add_argument("--sample-fraction", type=float, default=0.25,
+                    help="sampled plane: target fraction of root blocks "
+                         "drawn per level (1.0 degenerates to the exact "
+                         "batched plane)")
+    ap.add_argument("--confidence", type=float, default=0.95,
+                    help="sampled plane: nominal CI level of the support "
+                         "estimator — patterns whose interval reaches tau "
+                         "escalate to the exact plane")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="sampled plane: RNG key root of the per-level "
+                         "block draws (part of the session fingerprint)")
     ap.add_argument("--root-order", default="degree",
                     choices=["degree", "vertex"],
                     help="root-block schedule: highest max-out-degree "
@@ -69,6 +84,12 @@ def main(argv=None) -> int:
                     help="run the Pallas kernel in interpret mode: auto = "
                          "off on TPU, on elsewhere (interpret is required "
                          "off-TPU; the fused lowering only exists on TPU)")
+    ap.add_argument("--root-block", type=int, default=None,
+                    help="root-block width override (default: sized by "
+                         "MatchConfig.for_graph).  The sampled plane draws "
+                         "at root-block granularity — a graph the default "
+                         "geometry covers in one block has nothing to "
+                         "sample, so shrink this to turn estimation on")
     ap.add_argument("--max-size", type=int, default=4)
     ap.add_argument("--time-limit", type=float, default=1800.0,
                     help="paper uses a 30-minute timeout")
@@ -120,9 +141,13 @@ def main(argv=None) -> int:
         generation=args.generation, max_pattern_size=args.max_size,
         time_limit_s=args.time_limit, execution=args.execution,
         root_order=args.root_order,
+        sample_fraction=args.sample_fraction, confidence=args.confidence,
+        sample_seed=args.sample_seed,
         match=_dc.replace(
             MatchConfig.for_graph(g, cap=args.cap, expansion=args.expansion),
-            pallas_interpret=interpret),
+            pallas_interpret=interpret,
+            **({"root_block": args.root_block}
+               if args.root_block is not None else {})),
     )
     if args.checkpoint_dir:
         from repro.runtime import MiningSession
@@ -146,7 +171,8 @@ def main(argv=None) -> int:
           f"{res.peak_device_bytes / 2**20:.1f} MiB")
     for lvl, st in res.per_level.items():
         pretty = {k: (round(v, 3) if isinstance(v, float) else v)
-                  for k, v in st.items()}
+                  for k, v in st.items()
+                  if k != "block_peaks"}  # long per-block list; JSON only
         print(f"[mine]   level {lvl}: {pretty}")
     for pat, sup in res.frequent[:10]:
         tau = tau_threshold(args.sigma, args.lam, pat.k)
@@ -165,6 +191,12 @@ def main(argv=None) -> int:
             "peak_device_bytes": res.peak_device_bytes,
             "dispatches": sum(int(v.get("dispatches", 0))
                               for v in res.per_level.values()),
+            # sampled plane: escalations across levels (per-level detail —
+            # sample fraction, CI width, pruned count — sits in each
+            # per_level[...]["sampled"] dict)
+            "escalated": sum(int(v.get("sampled", {}).get("escalated", 0))
+                             for v in res.per_level.values()),
+            "estimated_patterns": sum(1 for st in res.stats if st.estimated),
             "per_level": {str(k): v for k, v in res.per_level.items()},
             # deterministic digest of the mined set: (k, support) pairs in
             # result order — what the CI resume-smoke diffs against an

@@ -10,6 +10,7 @@ from .session import DEFAULT_BLOCKS_PER_SUPER, MiningSession
 from .state import (
     GroupDone,
     LevelCursor,
+    SampledCursor,
     SessionState,
     decode_session,
     encode_session,
@@ -23,7 +24,7 @@ from .resume import (
 
 __all__ = [
     "MiningSession", "DEFAULT_BLOCKS_PER_SUPER",
-    "SessionState", "LevelCursor", "GroupDone",
+    "SessionState", "LevelCursor", "GroupDone", "SampledCursor",
     "encode_session", "decode_session",
     "load_session", "latest_snapshot", "session_fingerprint",
     "SessionMismatch",

@@ -41,7 +41,9 @@ from repro.core.flexis import (
 from repro.core.graph import DataGraph
 from repro.train import checkpoint as ckpt
 
-from .state import GroupDone, LevelCursor, SessionState, encode_session
+from .state import (
+    GroupDone, LevelCursor, SampledCursor, SessionState, encode_session,
+)
 from .resume import load_session, session_fingerprint
 
 __all__ = ["MiningSession", "DEFAULT_BLOCKS_PER_SUPER"]
@@ -74,6 +76,8 @@ class _LevelRecorder:
         self.inflight_super: Optional[SuperBlockState] = None
         self.plan: Optional[dict] = (
             resume_cursor.plan if resume_cursor else None)
+        self.sampled: Optional[SampledCursor] = (
+            resume_cursor.sampled if resume_cursor else None)
 
     # -- resume side --------------------------------------------------------
     def resume_plan(self) -> Optional[dict]:
@@ -88,6 +92,26 @@ class _LevelRecorder:
 
     def resume_dispatches(self) -> int:
         return sum(gd.dispatches for gd in self.groups_done)
+
+    def resume_block_peaks(self):
+        """Element-wise max of the completed groups' per-block peak
+        telemetry (block-id indexed), or None when no group recorded it."""
+        peaks = None
+        for gd in self.groups_done:
+            if gd.block_peaks is None:
+                continue
+            arr = list(gd.block_peaks)
+            if peaks is None:
+                peaks = arr
+            else:
+                peaks = [max(a, b) for a, b in zip(peaks, arr)]
+        return peaks
+
+    def resume_sampled(self) -> Optional[dict]:
+        """The sampled-phase cursor recorded for this level, or None."""
+        return (self._resume.sampled.to_dict()
+                if self._resume is not None
+                and self._resume.sampled is not None else None)
 
     def group_resume(self, k: int, lo: int):
         if self._resume is None or self._resume.inflight_key != (k, lo):
@@ -109,13 +133,21 @@ class _LevelRecorder:
         self._session._on_state_update()
 
     def on_group_done(self, k: int, lo: int, idxs, outcomes,
-                      dispatches: int) -> None:
+                      dispatches: int, block_peaks=None) -> None:
         self.groups_done.append(GroupDone(
             k=k, lo=lo, idxs=list(idxs), outcomes=list(outcomes),
-            dispatches=dispatches))
+            dispatches=dispatches,
+            block_peaks=(None if block_peaks is None
+                         else [int(x) for x in block_peaks])))
         self.inflight_key = None
         self.inflight_group = None
         self.inflight_super = None
+
+    def on_sampled(self, d: dict) -> None:
+        """Sampled-phase snapshot point (after each sample group and when
+        classification lands) — store the cursor and trigger the cadence."""
+        self.sampled = SampledCursor.from_dict(d)
+        self._session._on_state_update()
 
     def cursor(self) -> LevelCursor:
         return LevelCursor(
@@ -125,6 +157,7 @@ class _LevelRecorder:
             inflight_group=self.inflight_group,
             inflight_super=self.inflight_super,
             plan=self.plan,
+            sampled=self.sampled,
         )
 
 

@@ -34,7 +34,7 @@ from repro.core.flexis import MiningLoopState, PatternStats
 from repro.core.pattern import Pattern
 
 __all__ = [
-    "FORMAT", "GroupDone", "LevelCursor", "SessionState",
+    "FORMAT", "GroupDone", "LevelCursor", "SampledCursor", "SessionState",
     "encode_session", "decode_session",
     "encode_pattern", "decode_pattern",
 ]
@@ -69,6 +69,7 @@ def _encode_stats(st: PatternStats) -> Dict[str, Any]:
         "blocks_run": int(st.blocks_run),
         "max_count": int(st.max_count),
         "dispatches": int(st.dispatches),
+        "estimated": bool(st.estimated),
     }
 
 
@@ -83,6 +84,7 @@ def _decode_stats(d: Dict[str, Any]) -> PatternStats:
         blocks_run=d["blocks_run"],
         max_count=d.get("max_count", 0),
         dispatches=d.get("dispatches", 0),
+        estimated=d.get("estimated", False),
     )
 
 
@@ -94,6 +96,7 @@ def _encode_outcome(o: PatternOutcome) -> Dict[str, Any]:
         "overflowed": bool(o.overflowed),
         "blocks_run": int(o.blocks_run),
         "max_count": int(o.max_count),
+        "estimated": bool(o.estimated),
     }
 
 
@@ -146,6 +149,53 @@ class GroupDone:
     idxs: List[int]                     # level eval-set indices
     outcomes: List[PatternOutcome]
     dispatches: int
+    # per-block-id peak frontier occupancy over the blocks this group ran
+    # (length = total root blocks) — the sampled plane's next-level draw
+    # weights; None for snapshots written before the sampled plane existed
+    block_peaks: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class SampledCursor:
+    """Mid-level resume state specific to the sampled plane.
+
+    ``phase`` is ``"sample"`` (the weighted sample pass is running; the
+    completed groups live in ``groups``) or ``"escalate"`` (classification
+    finished — ``classify`` pins its verdicts — and the exact escalation
+    pass is running, its own group progress tracked by the ordinary
+    `LevelCursor` machinery).  ``positions``/``key`` replay the draw
+    verbatim so a resume never re-samples.
+    """
+
+    phase: str                          # "sample" | "escalate"
+    positions: List[int]                # sampled schedule indices (asc)
+    key: List[int]                      # RNG key words of the draw
+    # completed sample-pass groups, keyed "k:lo" →
+    # {"idxs", "ys" (per-pattern per-block increments), "outcomes",
+    #  "dispatches", "block_peaks"}
+    groups: Dict[str, dict]
+    # phase == "escalate" only: {"escalate" (eval-set indices),
+    # "pruned" (str(idx) → outcome dict), "ci_width_mean"}
+    classify: Optional[dict] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "phase": self.phase,
+            "positions": [int(x) for x in self.positions],
+            "key": [int(x) for x in self.key],
+            "groups": self.groups,
+            "classify": self.classify,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SampledCursor":
+        return cls(
+            phase=str(d["phase"]),
+            positions=[int(x) for x in d["positions"]],
+            key=[int(x) for x in d["key"]],
+            groups=dict(d.get("groups") or {}),
+            classify=d.get("classify"),
+        )
 
 
 @dataclasses.dataclass
@@ -160,10 +210,13 @@ class LevelCursor:
     inflight_group: Optional[GroupState] = None          # batched
     inflight_super: Optional[SuperBlockState] = None     # distributed
     # the planner's recorded decision for the in-flight level
-    # (`LevelPlan.to_dict()`; None under forced execution modes) — a
-    # resume replays this instead of re-planning, so calibration drift
-    # between processes cannot move an in-flight level's plan
+    # (`LevelPlan.to_dict()`; None under forced execution modes *except*
+    # "sampled", which records the level's block draw here) — a resume
+    # replays this instead of re-planning, so calibration drift between
+    # processes cannot move an in-flight level's plan
     plan: Optional[Dict[str, Any]] = None
+    # sampled plane only: the sample-pass / escalation phase cursor
+    sampled: Optional[SampledCursor] = None
 
 
 @dataclasses.dataclass
@@ -218,12 +271,16 @@ def encode_session(state: SessionState, metric: str,
                 "k": gd.k, "lo": gd.lo, "idxs": list(map(int, gd.idxs)),
                 "outcomes": [_encode_outcome(o) for o in gd.outcomes],
                 "dispatches": gd.dispatches,
+                "block_peaks": (None if gd.block_peaks is None
+                                else [int(x) for x in gd.block_peaks]),
             }
             for gd in cur.groups_done
         ],
         "inflight_key": (list(cur.inflight_key)
                          if cur.inflight_key is not None else None),
         "plan": cur.plan,
+        "sampled": (cur.sampled.to_dict()
+                    if cur.sampled is not None else None),
     }
     extra["cursor"]["level"] = cur.level
     if cur.inflight_group is not None:
@@ -242,6 +299,8 @@ def encode_session(state: SessionState, metric: str,
             "blocks_run": gs.blocks_run.tolist(),
             "dispatches": int(gs.dispatches),
             "max_count": gs_max.tolist(),
+            "block_peaks": (None if gs.block_peaks is None
+                            else np.asarray(gs.block_peaks).tolist()),
         }
         extra["cursor"]["group"] = list(cur.inflight_key)
         extra["cursor"]["block"] = int(gs.next_block)
@@ -291,12 +350,15 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
                 k=gd["k"], lo=gd["lo"], idxs=list(gd["idxs"]),
                 outcomes=[_decode_outcome(o) for o in gd["outcomes"]],
                 dispatches=gd["dispatches"],
+                block_peaks=gd.get("block_peaks"),
             )
             for gd in c["groups_done"]
         ],
         inflight_key=(tuple(c["inflight_key"])
                       if c["inflight_key"] is not None else None),
         plan=c.get("plan"),
+        sampled=(SampledCursor.from_dict(c["sampled"])
+                 if c.get("sampled") is not None else None),
     )
     inflight = c.get("inflight")
     n_leaves = extra["pytree"]["n_leaves"]
@@ -316,6 +378,8 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
             max_count=np.asarray(
                 inflight.get("max_count",
                              [0] * len(inflight["supports"])), np.int64),
+            block_peaks=(None if inflight.get("block_peaks") is None
+                         else np.asarray(inflight["block_peaks"], np.int64)),
         )
     elif inflight is not None and inflight["plane"] == "distributed":
         cursor.inflight_super = SuperBlockState(

@@ -64,6 +64,31 @@ def test_gate_blocks_parity_loss():
     assert len(failures) == 1 and "PARITY" in failures[0]
 
 
+def test_gate_blocks_accuracy_loss():
+    def srow(name, us, accuracy):
+        return {"name": name, "us_per_call": us, "derived": 1.0,
+                "accuracy": accuracy}
+
+    base = _traj([srow("exec_time/sampled/gnutella/s20/f0.5", 10.0, 1.0)])
+    good = _traj([srow("exec_time/sampled/gnutella/s20/f0.5", 11.0, 1.0)])
+    bad = _traj([srow("exec_time/sampled/gnutella/s20/f0.5", 10.0, 0.0)])
+    assert gate.check(base, good)[0] == []
+    failures, _ = gate.check(base, bad)
+    assert len(failures) == 1 and "ACCURACY" in failures[0]
+
+    # unlike parity rows, accuracy rows stay timing-gated
+    slow = _traj([srow("exec_time/sampled/gnutella/s20/f0.5", 100.0, 1.0)])
+    failures, _ = gate.check(base, slow)
+    assert len(failures) == 1 and "SLOWER" in failures[0]
+
+    # a sampled row only present in the FRESH file gets no grace period
+    fresh_only = _traj([srow("exec_time/sampled/gnutella/s20/f0.5", 10.0, 1.0),
+                        srow("exec_time/sampled/gnutella/s20/f0.25", 9.0, 0.0)])
+    failures, notes = gate.check(base, fresh_only)
+    assert len(failures) == 1 and "ACCURACY" in failures[0]
+    assert any("new row" in n for n in notes)
+
+
 def test_committed_trajectory_passes_against_itself(tmp_path):
     committed = ROOT / "BENCH_smoke.json"
     assert committed.is_file()

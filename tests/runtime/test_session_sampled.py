@@ -1,0 +1,109 @@
+"""Sampled-plane sessions — resume replays the identical draw (ISSUE 7).
+
+The contract: a sampled-plane run killed at *any* snapshot point — after
+any sample-pass group, at the classification snapshot, inside the exact
+escalation pass, or at a level boundary — and resumed from disk replays
+the identical sample schedule and RNG chain and reproduces the
+uninterrupted result bit-for-bit; and the sampled knobs join the session
+fingerprint, so a resume under a different ``sample_fraction`` raises
+`SessionMismatch` instead of silently mixing two draws.
+"""
+import pytest
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.data.synthetic import rmat_graph
+from repro.runtime import MiningSession, SessionMismatch, load_session
+
+from tests.runtime.test_session import Boom, _killed_session, _norm
+
+
+def _graph():
+    return rmat_graph(64, 320, n_labels=2, seed=3, undirected=True)
+
+
+def _cfg(**kw):
+    kw.setdefault("sigma", 6)
+    kw.setdefault("lam", 1.0)
+    kw.setdefault("max_pattern_size", 3)
+    kw.setdefault("match", MatchConfig(cap=512, root_block=8, chunk=16,
+                                       max_chunks=4, bisect_iters=7))
+    kw.setdefault("execution", "sampled")
+    kw.setdefault("sample_fraction", 0.5)
+    return MiningConfig(metric=kw.pop("metric", "mis"), **kw)
+
+
+def test_sampled_session_equals_mine(tmp_path):
+    g, cfg = _graph(), _cfg()
+    ref = mine(g, cfg)
+    sess = MiningSession(g, cfg, tmp_path, checkpoint_every=1)
+    assert _norm(sess.run()) == _norm(ref)
+    # the recorded level plans carry the draw (positions + RNG key)
+    plans = [lvl["plan"] for lvl in ref.per_level.values() if "plan" in lvl]
+    assert any(p.get("sample") for p in plans), "no draw ever recorded"
+    for p in plans:
+        if p.get("sample"):
+            s = p["sample"]
+            assert len(s["positions"]) == s["n_sample"]
+            assert s["key"][0] == cfg.sample_seed
+
+
+@pytest.mark.parametrize("kw", [
+    # the default: mid-level draw + escalation, mis greedy ordering
+    dict(),
+    # smaller fraction → more pruning/escalation churn to replay
+    dict(sample_fraction=0.25, metric="mni", sigma=4, lam=0.5),
+])
+def test_sampled_resume_bit_identical_at_every_snapshot(tmp_path, kw):
+    g = _graph()
+    cfg = _cfg(**kw)
+    ref = mine(g, cfg)
+
+    base = MiningSession(g, cfg, tmp_path / "base", checkpoint_every=1,
+                         keep_last=100)
+    assert _norm(base.run()) == _norm(ref)
+    total = base.snapshots_written
+    assert total >= 2
+
+    for kill_at in range(1, total + 1):
+        d = tmp_path / f"kill{kill_at}"
+        fired = _killed_session(g, cfg, d, kill_at,
+                                checkpoint_every=1, keep_last=100)
+        assert fired, f"bomb at snapshot {kill_at} never fired"
+        resumed = MiningSession(g, cfg, d, checkpoint_every=1,
+                                keep_last=100).run()
+        got, want = _norm(resumed), _norm(ref)
+        assert got == want, f"kill_at={kill_at}"
+
+
+def test_sampled_resume_replays_draw_not_redraws(tmp_path):
+    """The resumed process replays the *recorded* positions even when its
+    own planner would draw differently (sample_seed pinned via snapshot:
+    we tamper with nothing, just assert the per-level sample dicts of the
+    resumed run equal the uninterrupted run's — a re-draw at the resumed
+    level would shift the RNG chain and telemetry)."""
+    g, cfg = _graph(), _cfg()
+    ref = mine(g, cfg)
+    fired = _killed_session(g, cfg, tmp_path, 2, checkpoint_every=1,
+                            keep_last=100)
+    assert fired
+    assert load_session(tmp_path, cfg) is not None
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1,
+                            keep_last=100).run()
+    ref_plans = {k: v.get("plan") for k, v in ref.per_level.items()}
+    got_plans = {k: v.get("plan") for k, v in resumed.per_level.items()}
+    assert got_plans == ref_plans
+
+
+def test_sample_fraction_mismatch_refuses_resume(tmp_path):
+    g = _graph()
+    MiningSession(g, _cfg(), tmp_path, checkpoint_every=0).run()
+    with pytest.raises(SessionMismatch):
+        MiningSession(g, _cfg(sample_fraction=0.75), tmp_path).run()
+    with pytest.raises(SessionMismatch):
+        MiningSession(g, _cfg(sample_seed=1), tmp_path).run()
+    with pytest.raises(SessionMismatch):
+        MiningSession(g, _cfg(confidence=0.9), tmp_path).run()
+    # unchanged knobs resume fine (finished run re-materializes)
+    again = MiningSession(g, _cfg(), tmp_path)
+    again.run()
+    assert again.snapshots_written == 0
