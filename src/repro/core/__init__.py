@@ -15,6 +15,7 @@ from .generation import (
     generate_new_patterns,
     size2_patterns,
 )
+from .health import HealthEvent, RunHealth
 from .plan import PatternPlan, make_plan
 from .matcher import MatchConfig, match_block
 from .planner import (
@@ -49,6 +50,7 @@ __all__ = [
     "dedupe_patterns",
     "core_graphs", "core_groups", "edge_extension_candidates",
     "generate_new_patterns", "size2_patterns",
+    "HealthEvent", "RunHealth",
     "PatternPlan", "make_plan", "MatchConfig", "match_block",
     "CostModel", "ExecutionPlanner", "LevelPlan", "block_degree_stat",
     "load_calibration", "root_block_order",

@@ -407,6 +407,16 @@ def evaluate_level_distributed(
     every pattern still in flight.
     """
     assert len(patterns) == len(taus)
+    # fault-injection point for the mesh-failure class: an `error` fault
+    # here exercises `mine()`'s distributed→batched fallback exactly the
+    # way a real collective/mesh failure would (lazy import — core/ must
+    # not require runtime/ at import time)
+    try:
+        from repro.runtime import faults as _faults
+    except ImportError:  # pragma: no cover
+        _faults = None
+    if _faults is not None:
+        _faults.fire("level.distributed")
     mesh = mesh or mining_mesh(axis)
     n = host_g.n
     outcomes: List[Optional[batched_lib.PatternOutcome]] = [None] * len(patterns)

@@ -18,6 +18,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from .graph import DataGraph, DeviceGraph
+from .health import RunHealth
 from .pattern import Pattern
 from .canonical import canonical_key, dedupe_patterns
 from .generation import edge_extension_candidates, generate_new_patterns
@@ -160,6 +161,11 @@ class MiningResult:
     elapsed_s: float
     timed_out: bool
     peak_device_bytes: int
+    # every recovery/fallback/retry the run performed (overflow
+    # escalations, plane fallbacks, checkpoint repairs when run under a
+    # session) — results are bit-identical with or without them; see
+    # `core/health.py`.  Excluded from resume bit-identity comparisons.
+    health: RunHealth = dataclasses.field(default_factory=RunHealth)
 
 
 @dataclasses.dataclass
@@ -324,8 +330,17 @@ def _device_bytes(mcfg: MatchConfig, metric: str, k: int, n: int) -> int:
     return graphless
 
 
-def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
+def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None,
+         health: Optional[RunHealth] = None) -> MiningResult:
     """Algorithm 1.  Returns all frequent patterns + the paper's telemetry.
+
+    ``health`` is the run's `RunHealth` report (a fresh one when omitted;
+    sessions pass theirs in so checkpoint-layer recoveries and execution-
+    layer degradations land in the same log).  Two degradations happen
+    here: patterns that overflow an auto-derived cap are re-run at the
+    base cap (``overflow_escalation`` — restores forced-plane equality),
+    and a failing distributed level is re-run on the batched plane
+    (``plane_fallback`` — supports are plane-invariant).
 
     ``hooks`` is the session runtime's resume surface (duck-typed; see
     `repro.runtime.session.MiningSession`):
@@ -345,6 +360,8 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
     ``wall_s``).
     """
     t0 = time.monotonic()
+    if health is None:
+        health = RunHealth()
     dev_g = DeviceGraph.from_host(g)
     graph_bytes = g.nbytes()
 
@@ -460,12 +477,48 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
             elif plane == "distributed":
                 from . import distributed as distributed_lib
 
-                outcomes, lvl_timed_out, tel = distributed_lib.evaluate_level_distributed(
-                    g, eval_pats, eval_taus, plan.match,
-                    complete=cfg.complete, deadline=deadline,
-                    max_batch=plan.max_batch,
-                    blocks_per_super=cfg.blocks_per_super, hooks=level_hooks,
-                    block_order=block_order)
+                try:
+                    outcomes, lvl_timed_out, tel = distributed_lib.evaluate_level_distributed(
+                        g, eval_pats, eval_taus, plan.match,
+                        complete=cfg.complete, deadline=deadline,
+                        max_batch=plan.max_batch,
+                        blocks_per_super=cfg.blocks_per_super,
+                        hooks=level_hooks, block_order=block_order)
+                except Exception as e:
+                    # graceful degradation: a failed mesh/collective — or a
+                    # mesh that can no longer satisfy the recorded plan —
+                    # must not fail the query.  Re-run the level on the
+                    # batched plane: supports are bit-identical by the
+                    # plane-equivalence contract, and completed groups the
+                    # failed attempt recorded are replayed (only the
+                    # in-flight super-block cursor is dropped — it is the
+                    # wrong plane's resume unit).  `InjectedCrash` and
+                    # `PreemptedError` are BaseExceptions and fly past this
+                    # on purpose: a kill is not a mesh failure.
+                    health.record(
+                        "plane_fallback",
+                        f"distributed level failed "
+                        f"({type(e).__name__}: {e}); degrading to batched",
+                        level=level)
+                    if level_hooks is not None:
+                        drop = getattr(level_hooks, "drop_inflight", None)
+                        if drop is not None:
+                            drop()
+                    plan = dataclasses.replace(plan, plane="batched")
+                    if level_hooks is not None:
+                        record_plan = getattr(level_hooks, "record_plan",
+                                              None)
+                        if record_plan is not None:
+                            # a mid-level snapshot after this point must
+                            # resume on the batched plane, whatever the
+                            # original plan said
+                            record_plan(plan.to_dict())
+                    plane = "batched"
+                    outcomes, lvl_timed_out, tel = batched_lib.evaluate_level_batched(
+                        g, dev_g, eval_pats, eval_taus, cfg.metric,
+                        plan.match, complete=cfg.complete, deadline=deadline,
+                        max_batch=plan.max_batch, hooks=level_hooks,
+                        block_order=block_order)
             else:
                 outcomes, lvl_timed_out, tel = batched_lib.evaluate_level_batched(
                     g, dev_g, eval_pats, eval_taus, cfg.metric, plan.match,
@@ -477,6 +530,44 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
             lvl_max_count = max(lvl_max_count, tel.max_count)
             lvl_overflowed |= tel.overflowed
             peak_bytes = max(peak_bytes, graph_bytes + tel.state_bytes)
+            # graceful degradation, exactness half: the planner's
+            # right-sized cap guarantees headroom only over the *previous*
+            # level's peak, so a level can still overflow it.  Truncation
+            # is the only cap-dependent behaviour, so re-running just the
+            # overflowed patterns at the config's base geometry restores
+            # forced-plane equality (a non-overflowed pattern's history is
+            # cap-invariant, hence identical to the base-cap run already).
+            # Pure function of the recorded outcomes → a resumed run
+            # escalates identically.
+            esc = [i for i, o in enumerate(outcomes)
+                   if o is not None and o.overflowed]
+            if esc and plan.match.cap < cfg.match.cap and not timed_out:
+                re_out, re_to, re_tel = batched_lib.evaluate_level_batched(
+                    g, dev_g, [eval_pats[i] for i in esc],
+                    [eval_taus[i] for i in esc], cfg.metric, cfg.match,
+                    complete=cfg.complete, deadline=deadline,
+                    max_batch=plan.max_batch, block_order=block_order)
+                timed_out |= re_to
+                lvl_dispatches += re_tel.dispatches
+                peak_bytes = max(peak_bytes, graph_bytes + re_tel.state_bytes)
+                outcomes = list(outcomes)
+                done = 0
+                for i, o in zip(esc, re_out):
+                    if o is not None:
+                        outcomes[i] = o
+                        done += 1
+                # occupancy telemetry must describe the *final* outcomes
+                # (forced-plane equality covers max_count/overflowed too,
+                # and the next level's plan is derived from these)
+                lvl_max_count = max((o.max_count for o in outcomes
+                                     if o is not None), default=0)
+                lvl_overflowed = any(o.overflowed for o in outcomes
+                                     if o is not None)
+                health.record(
+                    "overflow_escalation",
+                    f"{done}/{len(esc)} patterns overflowed derived cap "
+                    f"{plan.match.cap}; re-run at base cap {cfg.match.cap}",
+                    level=level)
             for pat, tau, out in zip(eval_pats, eval_taus, outcomes):
                 if out is None:  # level timed out before this group ran
                     continue
@@ -498,6 +589,7 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
                     frequent.append((pat, st.support))
                     level_frequent.append(pat)
         else:
+            seq_stats: List[PatternStats] = []
             for pat, tau in zip(eval_pats, eval_taus):
                 if deadline is not None and time.monotonic() > deadline:
                     timed_out = True
@@ -505,19 +597,48 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
                 st = evaluate_pattern(g, dev_g, pat, tau, cfg,
                                       match_cfg=plan.match,
                                       block_order=block_order)
-                searched += 1
-                lvl_searched += 1
                 lvl_dispatches += st.dispatches
-                lvl_max_count = max(lvl_max_count, st.max_count)
-                lvl_overflowed |= st.overflowed
-                all_stats.append(st)
+                seq_stats.append(st)
                 peak_bytes = max(
                     peak_bytes,
                     graph_bytes + _device_bytes(plan.match, cfg.metric,
                                                 pat.k, g.n))
+            # same overflow-escalation pass as the plane branch (the
+            # sequential plane carries an auto-derived cap too — mis_exact
+            # under execution="auto" in particular always lands here)
+            if plan.match.cap < cfg.match.cap and not timed_out:
+                n_esc = 0
+                for j, st in enumerate(seq_stats):
+                    if not st.overflowed:
+                        continue
+                    if deadline is not None and time.monotonic() > deadline:
+                        timed_out = True
+                        break
+                    st = evaluate_pattern(g, dev_g, st.pattern, st.tau, cfg,
+                                          match_cfg=cfg.match,
+                                          block_order=block_order)
+                    lvl_dispatches += st.dispatches
+                    seq_stats[j] = st
+                    n_esc += 1
+                    peak_bytes = max(
+                        peak_bytes,
+                        graph_bytes + _device_bytes(cfg.match, cfg.metric,
+                                                    st.pattern.k, g.n))
+                if n_esc:
+                    health.record(
+                        "overflow_escalation",
+                        f"{n_esc} patterns overflowed derived cap "
+                        f"{plan.match.cap}; re-run at base cap "
+                        f"{cfg.match.cap}", level=level)
+            for st in seq_stats:
+                searched += 1
+                lvl_searched += 1
+                lvl_max_count = max(lvl_max_count, st.max_count)
+                lvl_overflowed |= st.overflowed
+                all_stats.append(st)
                 if st.frequent:
-                    frequent.append((pat, st.support))
-                    level_frequent.append(pat)
+                    frequent.append((st.pattern, st.support))
+                    level_frequent.append(st.pattern)
         per_level[level] = {
             "candidates": len(cp),
             "searched": lvl_searched,
@@ -571,4 +692,5 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None) -> MiningResult:
         elapsed_s=elapsed0 + (time.monotonic() - t0),
         timed_out=timed_out,
         peak_device_bytes=peak_bytes,
+        health=health,
     )

@@ -255,7 +255,9 @@ def load_calibration(path: Optional[str] = None) -> CostModel:
                       f"using built-in defaults", file=sys.stderr)
                 return CostModel()
             continue
-        d.setdefault("source", str(p))
+        # `source` records provenance-as-loaded: the path wins over any
+        # source the file itself carries (calibrate.py writes "fit")
+        d["source"] = str(p)
         return CostModel.from_dict(d)
     return CostModel()
 

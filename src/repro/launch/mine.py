@@ -23,6 +23,12 @@ from repro.core import MatchConfig, MiningConfig, mine
 from repro.core.flexis import tau_threshold
 from repro.data.synthetic import PAPER_DATASETS, paper_dataset
 
+# distinct "preempted, resumable" status: the run was stopped on request
+# (SIGTERM/SIGINT) after committing a final snapshot — rerunning the same
+# command line resumes it.  75 = BSD EX_TEMPFAIL ("temporary failure,
+# retry"), which is exactly the contract.
+EXIT_PREEMPTED = 75
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -150,7 +156,10 @@ def main(argv=None) -> int:
                if args.root_block is not None else {})),
     )
     if args.checkpoint_dir:
-        from repro.runtime import MiningSession
+        import signal
+
+        from repro.runtime import MiningSession, PreemptedError
+        from repro.train import checkpoint as ckpt
 
         session = MiningSession(
             g, cfg, args.checkpoint_dir,
@@ -158,7 +167,28 @@ def main(argv=None) -> int:
             resume="must" if args.resume else "auto",
             meta={"dataset": args.dataset, "scale": args.scale,
                   "seed": args.seed})
-        res = session.run()
+
+        # graceful shutdown: SIGTERM/SIGINT ask the session to stop at the
+        # next snapshot point instead of dying mid-write; the session cuts
+        # one final COMMIT'd snapshot and raises PreemptedError
+        def _on_signal(signum, frame):
+            print(f"[mine] caught signal {signum}: finishing the current "
+                  f"snapshot, then exiting resumable", flush=True)
+            session.request_preempt()
+
+        prev_handlers = {s: signal.signal(s, _on_signal)
+                         for s in (signal.SIGTERM, signal.SIGINT)}
+        try:
+            res = session.run()
+        except PreemptedError as e:
+            ckpt.wait_pending(raise_errors=False)  # flush async writes
+            print(f"[mine] preempted: {e}")
+            print(f"[mine] session: {session.snapshots_written} snapshots "
+                  f"written under {args.checkpoint_dir}")
+            return EXIT_PREEMPTED
+        finally:
+            for s, h in prev_handlers.items():
+                signal.signal(s, h)
         print(f"[mine] session: {session.snapshots_written} snapshots "
               f"written under {args.checkpoint_dir}")
     else:
@@ -169,6 +199,9 @@ def main(argv=None) -> int:
     print(f"[mine] frequent patterns: {len(res.frequent)}  "
           f"searched: {res.searched}  peak device bytes: "
           f"{res.peak_device_bytes / 2**20:.1f} MiB")
+    if res.health.degraded:
+        print(f"[mine] health: {res.health.to_dict()['counts']} — results "
+              f"are exact; see --json health.events for detail")
     for lvl, st in res.per_level.items():
         pretty = {k: (round(v, 3) if isinstance(v, float) else v)
                   for k, v in st.items()
@@ -197,6 +230,11 @@ def main(argv=None) -> int:
             "escalated": sum(int(v.get("sampled", {}).get("escalated", 0))
                              for v in res.per_level.values()),
             "estimated_patterns": sum(1 for st in res.stats if st.estimated),
+            # every recovery/fallback/retry the run performed (see
+            # core/health.py and README "Run health"); deliberately NOT
+            # part of the resume bit-identity contract — a resumed run
+            # records the recoveries the uninterrupted oracle never needed
+            "health": res.health.to_dict(),
             "per_level": {str(k): v for k, v in res.per_level.items()},
             # deterministic digest of the mined set: (k, support) pairs in
             # result order — what the CI resume-smoke diffs against an

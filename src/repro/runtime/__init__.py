@@ -6,7 +6,9 @@ in-flight device metric state) at level-boundary and root-block /
 super-block granularity, with mesh-shape-agnostic restore.  See
 `docs/architecture.md` ("Sessions and resume") for the dataflow.
 """
-from .session import DEFAULT_BLOCKS_PER_SUPER, MiningSession
+from . import faults
+from .faults import FaultPlan, FaultSpec, InjectedCrash, InjectedFault
+from .session import DEFAULT_BLOCKS_PER_SUPER, MiningSession, PreemptedError
 from .state import (
     GroupDone,
     LevelCursor,
@@ -23,7 +25,8 @@ from .resume import (
 )
 
 __all__ = [
-    "MiningSession", "DEFAULT_BLOCKS_PER_SUPER",
+    "MiningSession", "PreemptedError", "DEFAULT_BLOCKS_PER_SUPER",
+    "faults", "FaultPlan", "FaultSpec", "InjectedCrash", "InjectedFault",
     "SessionState", "LevelCursor", "GroupDone", "SampledCursor",
     "encode_session", "decode_session",
     "load_session", "latest_snapshot", "session_fingerprint",

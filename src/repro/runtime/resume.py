@@ -72,23 +72,10 @@ def _manifest(checkpoint_dir: Path, step: int) -> Dict[str, Any]:
     return json.loads((d / "manifest.json").read_text())
 
 
-def load_session(checkpoint_dir, cfg: MiningConfig, *,
-                 step: Optional[int] = None,
-                 fingerprint: Optional[Dict[str, Any]] = None,
-                 ) -> Optional[Tuple[SessionState, int]]:
-    """Load (SessionState, step) from the newest committed snapshot.
-
-    Returns None when the directory holds no committed snapshot.  When
-    ``fingerprint`` is given (see `session_fingerprint`), a stored
-    snapshot whose identity differs raises `SessionMismatch` — resuming
-    someone else's checkpoint silently would *look* like a successful
-    resume and mine garbage.
-    """
-    checkpoint_dir = Path(checkpoint_dir)
-    if step is None:
-        step = latest_snapshot(checkpoint_dir)
-        if step is None:
-            return None
+def _load_step(checkpoint_dir: Path, step: int, cfg: MiningConfig,
+               fingerprint: Optional[Dict[str, Any]]
+               ) -> Tuple[SessionState, int]:
+    """Load + validate one committed step (raises on any defect)."""
     manifest = _manifest(checkpoint_dir, step)
     # rebuild the leaf template from the manifest itself: logical shapes
     # are authoritative there, which is what makes the restore mesh-free
@@ -104,3 +91,52 @@ def load_session(checkpoint_dir, cfg: MiningConfig, *,
             f"run:\n  stored:  {stored}\n  current: {fingerprint}")
     leaves = [np.asarray(leaf) for leaf in leaves]
     return decode_session(leaves, extra, cfg.metric), step
+
+
+def load_session(checkpoint_dir, cfg: MiningConfig, *,
+                 step: Optional[int] = None,
+                 fingerprint: Optional[Dict[str, Any]] = None,
+                 health=None,
+                 ) -> Optional[Tuple[SessionState, int]]:
+    """Load (SessionState, step) from the newest *healthy* snapshot.
+
+    Self-healing restore: when the newest committed step turns out corrupt
+    — unreadable/garbage manifest, missing array file, CRC mismatch
+    (`checkpoint.CorruptCheckpointError`), undecodable session state — the
+    loader falls back across the retained COMMIT chain, newest→oldest,
+    instead of raising.  Every skipped step is recorded on ``health`` (a
+    `repro.core.health.RunHealth`) as a ``restore_fallback`` event.  The
+    worst case (every retained step corrupt) returns None, i.e. a fresh
+    run — degraded but never wrong.
+
+    An explicit ``step`` is strict: the caller asked for that exact
+    snapshot, so its defects propagate.  A `SessionMismatch` is never
+    fallen past either — resuming someone else's checkpoint silently would
+    *look* like a successful resume and mine garbage; an older step of the
+    same directory would mismatch identically.
+
+    Returns None when the directory holds no (healthy) committed snapshot.
+    """
+    checkpoint_dir = Path(checkpoint_dir)
+    if step is not None:
+        return _load_step(checkpoint_dir, step, cfg, fingerprint)
+    steps = ckpt.committed_steps(checkpoint_dir)
+    for s in reversed(steps):
+        try:
+            return _load_step(checkpoint_dir, s, cfg, fingerprint)
+        except SessionMismatch:
+            raise
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            # CorruptCheckpointError is a ValueError; FileNotFoundError
+            # (missing array/manifest) is an OSError; decode_session format
+            # defects surface as ValueError/KeyError/TypeError
+            if health is not None:
+                if (isinstance(e, ckpt.CorruptCheckpointError)
+                        and "CRC mismatch" in str(e)):
+                    health.record("checksum_mismatch", str(e), step=s)
+                health.record(
+                    "restore_fallback",
+                    f"step {s} corrupt ({type(e).__name__}: {e}); "
+                    f"falling back", step=s)
+            continue
+    return None

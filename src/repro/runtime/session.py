@@ -39,14 +39,26 @@ from repro.core.flexis import (
     MiningConfig, MiningLoopState, MiningResult, initial_candidates, mine,
 )
 from repro.core.graph import DataGraph
+from repro.core.health import RunHealth
 from repro.train import checkpoint as ckpt
 
+from . import faults
 from .state import (
     GroupDone, LevelCursor, SampledCursor, SessionState, encode_session,
 )
 from .resume import load_session, session_fingerprint
 
-__all__ = ["MiningSession", "DEFAULT_BLOCKS_PER_SUPER"]
+__all__ = ["MiningSession", "PreemptedError", "DEFAULT_BLOCKS_PER_SUPER"]
+
+
+class PreemptedError(BaseException):
+    """The session was asked to stop (`request_preempt`) and did so right
+    after committing a snapshot — the run is consistent and resumable.
+
+    A *BaseException* on purpose (like KeyboardInterrupt): no recovery
+    path — plane fallback, save retry — may swallow a preemption request;
+    only the top-level driver (`launch/mine.py`) catches it.
+    """
 
 # distributed-plane sessions pin the logical super-block width so the
 # schedule (and with it every accounting field) survives a mesh reshape;
@@ -143,6 +155,21 @@ class _LevelRecorder:
         self.inflight_group = None
         self.inflight_super = None
 
+    def drop_inflight(self) -> None:
+        """Discard the in-flight group/super-block state (plane fallback:
+        a batched re-run of the level cannot consume a distributed
+        super-block cursor — completed groups stay, they are plane-
+        agnostic outcomes)."""
+        self.inflight_key = None
+        self.inflight_group = None
+        self.inflight_super = None
+        if self._resume is not None:
+            # the resume cursor may hold the other plane's in-flight state
+            # too (group_resume would hand it to the wrong executor)
+            self._resume = dataclasses.replace(
+                self._resume, inflight_key=None, inflight_group=None,
+                inflight_super=None)
+
     def on_sampled(self, d: dict) -> None:
         """Sampled-phase snapshot point (after each sample group and when
         classification lands) — store the cursor and trigger the cadence."""
@@ -216,12 +243,22 @@ class MiningSession:
         unless a snapshot exists).
       meta: optional JSON-serializable dict stored in every snapshot
         (dataset provenance etc.; not validated on resume).
+      async_saves: write mid-run snapshots through
+        `checkpoint.save_async` (depth-1 write-behind: each snapshot first
+        drains — and surfaces any error of — the previous one, so writes
+        stay ordered and failures are never silent).  The final snapshot
+        of a run is always synchronous.  ``False`` = every snapshot
+        synchronous (the pre-PR-9 behavior).
+      health: a `RunHealth` to record recoveries into (shared with
+        `mine()`; a fresh one is created when omitted — read it back from
+        ``MiningResult.health`` or ``session.health``).
     """
 
     def __init__(self, g: DataGraph, cfg: MiningConfig,
                  checkpoint_dir, *, checkpoint_every: int = 1,
                  keep_last: int = 3, resume: str = "auto",
-                 meta: Optional[dict] = None):
+                 meta: Optional[dict] = None, async_saves: bool = True,
+                 health: Optional[RunHealth] = None):
         if resume not in ("auto", "never", "must"):
             raise ValueError('resume must be "auto", "never" or "must"')
         if checkpoint_every < 0:
@@ -246,10 +283,40 @@ class MiningSession:
         self._t0 = 0.0
         self._elapsed0 = 0.0
         self.snapshots_written = 0
+        self._async = bool(async_saves)
+        self._final_save = False        # next _save is the run's last
+        self._preempt_requested = False
+        self.health = health if health is not None else RunHealth()
+
+    def request_preempt(self) -> None:
+        """Ask the run to stop at the next snapshot point.
+
+        Signal-handler safe (sets a flag).  The driver keeps mining until
+        the next snapshot is fully committed — mid-level cadence permitting,
+        at most ``checkpoint_every`` state updates away — then raises
+        `PreemptedError` out of `run()`.  The directory then holds a
+        consistent snapshot; a later run resumes it bit-identically.
+        """
+        self._preempt_requested = True
 
     # -- persistence --------------------------------------------------------
     def _elapsed(self) -> float:
         return self._elapsed0 + (time.monotonic() - self._t0)
+
+    def _drain_pending(self) -> None:
+        """Join in-flight background writes, surfacing collected errors.
+
+        The first error is recorded in `RunHealth` and re-raised — a
+        background snapshot write failing is a *caller's* problem (the
+        run's durability story just changed), never a daemon thread's.
+        """
+        errs = ckpt.wait_pending(raise_errors=False)
+        if errs:
+            self.health.record(
+                "save_async_failure",
+                f"background snapshot write failed: "
+                f"{type(errs[0]).__name__}: {errs[0]}", step=self._step)
+            raise errs[0]
 
     def _save(self, state: SessionState) -> None:
         if state.calibration is None:
@@ -258,18 +325,37 @@ class MiningSession:
         extra["fingerprint"] = self._fingerprint
         extra["meta"] = self.meta
         self._step += 1
-        ckpt.save(self.dir, self._step, leaves, extra=extra,
-                  keep_last=self.keep_last)
+        # depth-1 write-behind: drain (and surface any failure of) the
+        # previous background write before starting the next, so snapshot
+        # writes stay ordered and at most one overlaps compute
+        self._drain_pending()
+        sync = (not self._async or self._final_save
+                or self._preempt_requested)
+        if sync:
+            ckpt.save(self.dir, self._step, leaves, extra=extra,
+                      keep_last=self.keep_last, health=self.health)
+        else:
+            ckpt.save_async(self.dir, self._step, leaves, extra=extra,
+                            keep_last=self.keep_last, health=self.health)
         self.snapshots_written += 1
         self._updates = 0
+        faults.fire("session.snapshot", step=self._step)
+        if self._preempt_requested:
+            self.health.record(
+                "preempted", f"stopped after committed snapshot "
+                f"step {self._step}", step=self._step)
+            raise PreemptedError(
+                f"preempted; snapshot step {self._step} committed under "
+                f"{self.dir} — resume to continue")
 
     def _on_state_update(self) -> None:
         """Called by the recorder after every carried-state update."""
-        if self.checkpoint_every == 0:
-            return
         self._updates += 1
-        if self._updates < self.checkpoint_every:
-            return
+        if not self._preempt_requested:  # a preempt snapshots immediately
+            if self.checkpoint_every == 0:
+                return
+            if self._updates < self.checkpoint_every:
+                return
         boundary = self._boundary
         assert boundary is not None and self._recorder is not None
         loop = dataclasses.replace(boundary, elapsed_s=self._elapsed())
@@ -278,15 +364,28 @@ class MiningSession:
     def _on_level_end(self, loop: MiningLoopState) -> None:
         self._boundary = loop
         self._recorder = None
+        # the final boundary (no candidates left) is the run's last write:
+        # always synchronous, so `run()` returning implies durability
+        self._final_save = not loop.cp
         self._save(SessionState(loop=loop))
 
     # -- driver -------------------------------------------------------------
     def run(self) -> MiningResult:
         """Mine (or continue mining) and return the `MiningResult`."""
+        # drain writes a previous in-process session may have left in
+        # flight (the fault-matrix tests resume in-process); their errors
+        # are recorded, not raised — the snapshot they failed to write is
+        # simply not there to resume from
+        for e in ckpt.wait_pending(raise_errors=False):
+            self.health.record(
+                "save_async_failure",
+                f"prior background snapshot write failed: "
+                f"{type(e).__name__}: {e}")
         resume_state: Optional[SessionState] = None
         if self._resume_mode != "never":
             loaded = load_session(self.dir, self.cfg,
-                                  fingerprint=self._fingerprint)
+                                  fingerprint=self._fingerprint,
+                                  health=self.health)
             if loaded is None and self._resume_mode == "must":
                 raise FileNotFoundError(
                     f"resume='must' but no committed session snapshot "
@@ -305,4 +404,9 @@ class MiningSession:
                 peak_bytes=self.g.nbytes(), elapsed_s=0.0)
         self._t0 = time.monotonic()
         hooks = _SessionHooks(self, resume_state)
-        return mine(self.g, self.cfg, hooks=hooks)
+        res = mine(self.g, self.cfg, hooks=hooks, health=self.health)
+        # the final boundary save is synchronous, so normally nothing is
+        # pending here; a run with no levels at all never saved — either
+        # way this is a cheap invariant, not a flush
+        self._drain_pending()
+        return res

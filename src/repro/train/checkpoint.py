@@ -2,13 +2,25 @@
 
 Layout (one directory per step):
     <root>/step_000123/
-        manifest.json         # tree structure, shapes, dtypes, data state
+        manifest.json         # tree structure, shapes, dtypes, CRCs, extra
         arr_00000.npy …       # one file per leaf (full logical array)
         COMMIT                # written last — a step without COMMIT is junk
 
 Guarantees:
   * atomic: writes go to step_XXXX.tmp/, fsync'd, then rename + COMMIT —
     a crash mid-save never corrupts the latest good checkpoint;
+  * verified: the manifest carries a CRC-32 per leaf (format v2); `restore`
+    checks every array against it and raises `CorruptCheckpointError` on
+    silent bit-rot instead of handing back garbage (v1 manifests without
+    CRCs still restore, unverified);
+  * self-healing callers: `committed_steps` + per-step `restore` let a
+    caller walk the retained COMMIT chain newest→oldest until a step
+    verifies (the session runtime does exactly this — see
+    `repro.runtime.resume.load_session`);
+  * retried: transient I/O errors during a save (`EIO`, `ENOSPC`, `EAGAIN`,
+    `EINTR`) are retried with exponential backoff before giving up — the
+    tmp-dir protocol makes a retried attempt indistinguishable from a
+    first one;
   * elastic: leaves are saved as *full logical arrays* so a restore may use
     a different mesh shape (re-sharding happens on load via device_put);
   * resumable data pipeline: the manifest carries opaque `extra` state
@@ -21,34 +33,84 @@ Guarantees:
     become lists *before* the write, not after the crash);
   * retention: keep_last prunes old steps after a successful COMMIT, and
     stale ``step_*.tmp`` directories abandoned by a crashed writer are
-    swept on the next save.
+    swept on the next save — the sweep TTL is configurable
+    (``stale_tmp_s`` / ``$REPRO_STALE_TMP_S``) and *always* excludes tmp
+    dirs this process is currently writing, so an aggressive TTL can
+    never race an in-flight `save_async`.
 
 An async flavor (`save_async`) offloads the host write to a thread so the
-next step's compute overlaps the checkpoint I/O.
+next step's compute overlaps the checkpoint I/O.  Background failures are
+never swallowed: each worker records its exception, and the first one is
+re-raised from `wait_pending()` or from the next `save`/`save_async` call.
+
+Fault injection: the write path fires named `repro.runtime.faults` points
+(``save.io``, ``save.array_write``, ``save.manifest``, ``save.pre_commit``,
+``save.committed``) — no-ops unless a `FaultPlan` is installed — which is
+how the chaos tests prove every guarantee above deterministically.
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending",
-           "validate_extra"]
+__all__ = ["save", "save_async", "restore", "latest_step", "committed_steps",
+           "wait_pending", "validate_extra", "CorruptCheckpointError",
+           "TRANSIENT_ERRNOS", "DEFAULT_SAVE_RETRIES",
+           "DEFAULT_RETRY_BACKOFF_S", "STALE_TMP_ENV"]
 
-FORMAT_VERSION = 1
+# format 2 = format 1 + per-leaf "crc32" in manifest["leaves"] entries
+FORMAT_VERSION = 2
 
 # a step_*.tmp untouched for this long was abandoned by a crashed writer
-# (a live save_async thread is still appending/fsyncing well within this)
+# (a live save_async thread is still appending/fsyncing well within this);
+# override per-call via save(stale_tmp_s=...) or globally via the env var
 _STALE_TMP_S = 60.0
+STALE_TMP_ENV = "REPRO_STALE_TMP_S"
 
-_PENDING: list = []
+# save I/O errors worth retrying: transient device/FS conditions that a
+# backoff can outlive (a full disk is often a *briefly* full disk when a
+# retention sweep or log rotation runs beside the writer)
+TRANSIENT_ERRNOS = frozenset({errno.EIO, errno.ENOSPC, errno.EAGAIN,
+                              errno.EINTR})
+DEFAULT_SAVE_RETRIES = 2
+DEFAULT_RETRY_BACKOFF_S = 0.05
+
+# in-flight background saves: (thread, error_slot) pairs.  error_slot is a
+# one-element list the worker fills on failure — `wait_pending` and the
+# next `save`/`save_async` re-raise the first collected error instead of
+# letting it die with the daemon thread.
+_PENDING: List[Tuple[threading.Thread, list]] = []
+_PENDING_LOCK = threading.Lock()
+
+# tmp dirs this process is writing right now — the stale sweep never
+# touches them, whatever the TTL says
+_ACTIVE_TMP: set = set()
+_ACTIVE_LOCK = threading.Lock()
+
+
+class CorruptCheckpointError(ValueError):
+    """A committed step failed verification (CRC mismatch / bad manifest)."""
+
+
+def _fire(point: str, **ctx) -> None:
+    """Fault-injection hook (lazy import: train/ must not require runtime/
+    at import time).  One function call + None check when no plan is
+    installed."""
+    try:
+        from repro.runtime import faults
+    except ImportError:  # pragma: no cover - runtime package always ships
+        return
+    faults.fire(point, **ctx)
 
 
 def validate_extra(extra: Optional[Dict[str, Any]]) -> Dict[str, Any]:
@@ -92,54 +154,132 @@ def _tree_paths(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
+def _stale_ttl(stale_tmp_s: Optional[float]) -> float:
+    if stale_tmp_s is not None:
+        return float(stale_tmp_s)
+    env = os.environ.get(STALE_TMP_ENV)
+    if env:
+        try:
+            return float(env)
+        except ValueError:
+            pass
+    return _STALE_TMP_S
+
+
+def _raise_pending_errors() -> None:
+    """Re-raise the first error a *finished* background save collected.
+
+    Non-blocking: still-running writers are left alone (they are checked
+    again at the next call or at `wait_pending`)."""
+    with _PENDING_LOCK:
+        done = [(t, e) for t, e in _PENDING if not t.is_alive()]
+        for entry in done:
+            _PENDING.remove(entry)
+    errs = [e[0] for _, e in done if e]
+    if errs:
+        raise errs[0]
+
+
 def save(root: str | os.PathLike, step: int, tree, *,
-         extra: Optional[Dict[str, Any]] = None, keep_last: int = 3) -> Path:
+         extra: Optional[Dict[str, Any]] = None, keep_last: int = 3,
+         retries: int = DEFAULT_SAVE_RETRIES,
+         retry_backoff_s: float = DEFAULT_RETRY_BACKOFF_S,
+         stale_tmp_s: Optional[float] = None,
+         health=None) -> Path:
+    """Atomically persist ``tree`` (+ ``extra``) as step ``step``.
+
+    Transient I/O errors (`TRANSIENT_ERRNOS`) are retried up to ``retries``
+    times with exponential backoff starting at ``retry_backoff_s``; each
+    retry is recorded on ``health`` (a `repro.core.health.RunHealth`) when
+    given.  Also surfaces (re-raises) any error a previous `save_async`
+    worker collected.
+    """
     _ensure_json_extra(extra)  # fail fast, before any disk write
+    _raise_pending_errors()
+    for attempt in range(retries + 1):
+        try:
+            return _save_once(root, step, tree, extra=extra,
+                              keep_last=keep_last, stale_tmp_s=stale_tmp_s)
+        except OSError as e:
+            if e.errno not in TRANSIENT_ERRNOS or attempt == retries:
+                raise
+            if health is not None:
+                health.record(
+                    "save_retry",
+                    f"attempt {attempt + 1}/{retries + 1} hit "
+                    f"{errno.errorcode.get(e.errno, e.errno)}: {e}",
+                    step=step)
+            time.sleep(retry_backoff_s * (2 ** attempt))
+    raise AssertionError("unreachable")
+
+
+def _save_once(root, step: int, tree, *, extra, keep_last: int,
+               stale_tmp_s: Optional[float]) -> Path:
     extra = extra or {}
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
     final = root / f"step_{step:08d}"
     tmp = root / f"step_{step:08d}.tmp"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
+    with _ACTIVE_LOCK:
+        _ACTIVE_TMP.add(tmp)
+    try:
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        _fire("save.io", step=step)
 
-    leaves, treedef = _tree_paths(tree)
-    manifest = {
-        "format_version": FORMAT_VERSION,
-        "step": step,
-        "treedef": str(treedef),
-        "n_leaves": len(leaves),
-        "extra": extra,
-        "time": time.time(),
-        "leaves": [],
-    }
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(tmp / f"arr_{i:05d}.npy", arr)
-        manifest["leaves"].append(
-            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    # fsync directory contents before commit
-    for f in tmp.iterdir():
-        fd = os.open(f, os.O_RDONLY)
-        os.fsync(fd)
-        os.close(fd)
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
-    (final / "COMMIT").write_text("ok")
+        leaves, treedef = _tree_paths(tree)
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "extra": extra,
+            "time": time.time(),
+            "leaves": [],
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            fpath = tmp / f"arr_{i:05d}.npy"
+            np.save(fpath, arr)
+            manifest["leaves"].append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            })
+            _fire("save.array_write", path=fpath, step=step)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        _fire("save.manifest", path=tmp / "manifest.json", step=step)
+        # fsync directory contents before commit
+        for f in tmp.iterdir():
+            fd = os.open(f, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        _fire("save.pre_commit", step=step)
+        (final / "COMMIT").write_text("ok")
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE_TMP.discard(tmp)
+    _fire("save.committed", path=final, step=step)
 
     # retention — committed steps beyond keep_last, plus any stale tmp dirs
     # abandoned by a writer that crashed before its rename (ours was either
-    # renamed away above or never existed at this point)
+    # renamed away above or never existed at this point; other *live* tmp
+    # dirs of this process are excluded via _ACTIVE_TMP regardless of age)
     steps = sorted(p for p in root.glob("step_????????")
                    if (p / "COMMIT").exists())
     for old in steps[:-keep_last]:
         shutil.rmtree(old, ignore_errors=True)
+    ttl = _stale_ttl(stale_tmp_s)
+    with _ACTIVE_LOCK:
+        active = set(_ACTIVE_TMP)
     for junk in root.glob("step_????????.tmp"):
-        try:  # age-guarded: never race a concurrent save_async writer
-            stale = time.time() - junk.stat().st_mtime > _STALE_TMP_S
+        if junk in active:
+            continue
+        try:  # age-guarded: never race a concurrent writer's fresh tmp
+            stale = time.time() - junk.stat().st_mtime > ttl
         except OSError:
             continue
         if stale:
@@ -147,43 +287,84 @@ def save(root: str | os.PathLike, step: int, tree, *,
     return final
 
 
-def save_async(root, step, tree, *, extra=None, keep_last: int = 3):
-    """Snapshot to host memory synchronously, write to disk in a thread."""
+def save_async(root, step, tree, *, extra=None, keep_last: int = 3,
+               retries: int = DEFAULT_SAVE_RETRIES,
+               retry_backoff_s: float = DEFAULT_RETRY_BACKOFF_S,
+               stale_tmp_s: Optional[float] = None, health=None):
+    """Snapshot to host memory synchronously, write to disk in a thread.
+
+    Returns the worker thread (join it, or call `wait_pending`).  A worker
+    that fails records its exception; `wait_pending` or the next
+    `save`/`save_async` re-raises it — background write failures are never
+    silently dropped.
+    """
+    _raise_pending_errors()
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
     snapshot = jax.tree_util.tree_unflatten(treedef, host_leaves)
 
-    t = threading.Thread(
-        target=save, args=(root, step, snapshot),
-        kwargs=dict(extra=extra, keep_last=keep_last), daemon=True)
+    err: list = []
+
+    def _work():
+        try:
+            save(root, step, snapshot, extra=extra, keep_last=keep_last,
+                 retries=retries, retry_backoff_s=retry_backoff_s,
+                 stale_tmp_s=stale_tmp_s, health=health)
+        except BaseException as e:  # noqa: BLE001 - collected, not dropped
+            err.append(e)
+
+    t = threading.Thread(target=_work, daemon=True)
     t.start()
-    _PENDING.append(t)
+    with _PENDING_LOCK:
+        _PENDING.append((t, err))
     return t
 
 
-def wait_pending():
-    while _PENDING:
-        _PENDING.pop().join()
+def wait_pending(raise_errors: bool = True) -> List[BaseException]:
+    """Join every in-flight background save.
+
+    Re-raises the first collected worker error (``raise_errors=True``,
+    default) or returns the list of errors (``raise_errors=False`` — the
+    session runtime drains this way and records them in `RunHealth`).
+    """
+    errs: List[BaseException] = []
+    while True:
+        with _PENDING_LOCK:
+            if not _PENDING:
+                break
+            t, e = _PENDING.pop()
+        t.join()
+        errs.extend(e)
+    if errs and raise_errors:
+        raise errs[0]
+    return errs
+
+
+def committed_steps(root) -> List[int]:
+    """All committed step indices under ``root``, ascending."""
+    root = Path(root)
+    if not root.exists():
+        return []
+    return sorted(int(p.name.split("_")[1])
+                  for p in root.glob("step_????????")
+                  if (p / "COMMIT").exists())
 
 
 def latest_step(root) -> Optional[int]:
-    root = Path(root)
-    if not root.exists():
-        return None
-    steps = sorted(p for p in root.glob("step_????????")
-                   if (p / "COMMIT").exists())
-    if not steps:
-        return None
-    return int(steps[-1].name.split("_")[1])
+    steps = committed_steps(root)
+    return steps[-1] if steps else None
 
 
 def restore(root, tree_like, *, step: Optional[int] = None,
-            shardings=None) -> Tuple[Any, Dict[str, Any], int]:
+            shardings=None, verify: bool = True
+            ) -> Tuple[Any, Dict[str, Any], int]:
     """Restore into the structure of `tree_like` (shapes must match).
 
     `shardings`: optional pytree of NamedSharding — leaves are device_put
     with them (elastic re-mesh happens here: the stored arrays are logical).
-    Returns (tree, extra, step).
+    ``verify`` checks each array against its manifest CRC-32 (format-v2
+    checkpoints; v1 manifests without CRCs load unverified) and raises
+    `CorruptCheckpointError` on a mismatch.  Returns (tree, extra, step).
     """
     root = Path(root)
     if step is None:
@@ -193,7 +374,10 @@ def restore(root, tree_like, *, step: Optional[int] = None,
     d = root / f"step_{step:08d}"
     if not (d / "COMMIT").exists():
         raise FileNotFoundError(f"checkpoint {d} has no COMMIT (partial write?)")
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except ValueError as e:
+        raise CorruptCheckpointError(f"{d}: unreadable manifest: {e}") from e
     leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
     assert manifest["n_leaves"] == len(leaves_like), \
         f"leaf count mismatch: ckpt {manifest['n_leaves']} vs tree {len(leaves_like)}"
@@ -201,10 +385,22 @@ def restore(root, tree_like, *, step: Optional[int] = None,
     sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                  if shardings is not None else [None] * len(leaves_like))
     for i, (like, sh) in enumerate(zip(leaves_like, sh_leaves)):
-        arr = np.load(d / f"arr_{i:05d}.npy")
+        try:
+            arr = np.load(d / f"arr_{i:05d}.npy")
+        except (OSError, ValueError) as e:
+            raise CorruptCheckpointError(
+                f"{d}: leaf {i} unreadable: {e}") from e
         want = tuple(getattr(like, "shape", arr.shape))
         if tuple(arr.shape) != want:
             raise ValueError(f"leaf {i}: shape {arr.shape} != expected {want}")
+        stored_crc = manifest["leaves"][i].get("crc32")
+        if verify and stored_crc is not None:
+            got_crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got_crc != stored_crc:
+                raise CorruptCheckpointError(
+                    f"{d}: leaf {i} CRC mismatch "
+                    f"(stored {stored_crc:#010x}, got {got_crc:#010x}) — "
+                    f"silent corruption")
         out.append(jax.device_put(arr, sh) if sh is not None else
                    jax.numpy.asarray(arr))
     tree = jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,330 @@
+"""Deterministic fault-matrix chaos tests (ISSUE 9 acceptance).
+
+The headline property: for every fault class at every injection point —
+torn tmp writes, silent array bit-rot, manifest corruption, transient
+EIO/ENOSPC, crash-inside-save, kill-at-snapshot — a checkpointed mining
+run completes (restarting on injected kills, exactly like the CI
+resume-smoke loop) and its frequent set + supports are **bit-identical**
+to the fault-free oracle, with every recovery recorded in `RunHealth`.
+
+Also covered here: graceful degradation (overflow-escalation restoring
+forced-plane equality under an auto-derived cap that overflows;
+distributed→batched plane fallback), COMMIT-chain fallback per corrupted
+artifact, and in-process preemption.  Checkpoint-layer unit tests (CRC,
+retry/backoff, async error surfacing, stale-tmp sweep) live in
+tests/train/test_checkpoint.py.
+
+Graphs are tiny on purpose — every fault cell re-mines the graph at least
+once, and the contract is structural, not scale-dependent.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.core import planner as planner_lib
+from repro.data.synthetic import rmat_graph
+from repro.runtime import (
+    FaultPlan, FaultSpec, InjectedCrash, MiningSession, PreemptedError,
+    faults,
+)
+from repro.train import checkpoint as ckpt
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_fault_plan():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _graph():
+    return rmat_graph(64, 320, n_labels=2, seed=3, undirected=True)
+
+
+def _match_cfg():
+    return MatchConfig(cap=512, root_block=16, chunk=16, max_chunks=4,
+                       bisect_iters=7)
+
+
+def _cfg(metric="mis", **kw):
+    kw.setdefault("sigma", 6)
+    kw.setdefault("lam", 1.0)
+    kw.setdefault("max_pattern_size", 3)
+    kw.setdefault("match", _match_cfg())
+    return MiningConfig(metric=metric, **kw)
+
+
+def _norm(res, *, drop_level_keys=("wall_s",)):
+    """Everything in a MiningResult except wall-clock (and health)."""
+    return dict(
+        frequent=[(p.key(), s) for p, s in res.frequent],
+        searched=res.searched,
+        stats=[(st.pattern.key(), st.support, st.tau, st.frequent,
+                st.embeddings_found, st.overflowed, st.blocks_run)
+               for st in res.stats],
+        per_level={k: {kk: vv for kk, vv in v.items()
+                       if kk not in drop_level_keys}
+                   for k, v in res.per_level.items()},
+        timed_out=res.timed_out,
+        peak=res.peak_device_bytes,
+    )
+
+
+def _supports(res):
+    return sorted((p.key(), int(s)) for p, s in res.frequent)
+
+
+def _run_with_faults(g, cfg, ckpt_dir, plan, *, max_restarts=10, **kw):
+    """The chaos driver: install the plan, mine, restart on injected
+    kills (the in-process analogue of the CI kill+resume loop)."""
+    faults.install(plan)
+    restarts = 0
+    try:
+        while True:
+            sess = MiningSession(g, cfg, ckpt_dir, **kw)
+            try:
+                return sess.run()
+            except InjectedCrash:
+                restarts += 1
+                assert restarts <= max_restarts, (
+                    f"fault driver livelocked after {restarts} restarts: "
+                    f"{plan.fired}")
+    finally:
+        faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# the fault × injection-point matrix
+# ---------------------------------------------------------------------------
+
+# (id, fault specs, health event kind the recovery must record — None when
+# the recovery is the COMMIT protocol itself, which is silent by design)
+MATRIX = [
+    ("save-io-eio-transient",
+     [FaultSpec("save.io", "io_error", at=2, errno_name="EIO")],
+     "save_retry"),
+    ("save-io-enospc-transient",
+     [FaultSpec("save.io", "io_error", at=1, times=2,
+                errno_name="ENOSPC")],
+     "save_retry"),
+    ("torn-array-write",
+     [FaultSpec("save.array_write", "torn_write", at=2)],
+     None),
+    ("manifest-corruption-then-kill",
+     [FaultSpec("save.manifest", "corrupt_manifest", at=3),
+      FaultSpec("session.snapshot", "crash", at=3)],
+     "restore_fallback"),
+    ("array-bitflip-then-kill",
+     [FaultSpec("save.committed", "bitflip", at=3),
+      FaultSpec("session.snapshot", "crash", at=3)],
+     "restore_fallback"),
+    ("crash-inside-save",
+     [FaultSpec("save.pre_commit", "crash", at=2)],
+     None),
+    ("kill-at-first-snapshot",
+     [FaultSpec("session.snapshot", "crash", at=1)],
+     None),
+    ("kill-at-later-snapshot",
+     [FaultSpec("session.snapshot", "crash", at=4)],
+     None),
+]
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    g, cfg = _graph(), _cfg(execution="batched")
+    return mine(g, cfg)
+
+
+@pytest.mark.parametrize("specs,expect",
+                         [m[1:] for m in MATRIX],
+                         ids=[m[0] for m in MATRIX])
+def test_fault_matrix_bit_identical(tmp_path, oracle, specs, expect):
+    g, cfg = _graph(), _cfg(execution="batched")
+    plan = FaultPlan(specs, seed=7)
+    res = _run_with_faults(g, cfg, tmp_path, plan,
+                           checkpoint_every=1, keep_last=3)
+    assert plan.fired, "no fault fired — the matrix cell tested nothing"
+    assert _norm(res) == _norm(oracle)
+    if expect is not None:
+        assert res.health.count(expect) >= 1, res.health.to_dict()
+
+
+def test_fault_matrix_cells_cover_every_point():
+    """The matrix exercises every checkpoint/session injection point (the
+    distributed-plane point has its own fallback tests below)."""
+    covered = {s.point for _, specs, _ in MATRIX for s in specs}
+    assert covered == {p for p in faults.POINTS if p != "level.distributed"}
+
+
+# ---------------------------------------------------------------------------
+# COMMIT-chain fallback, per corrupted artifact of the newest step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("artifact", ["array", "manifest", "commit"])
+def test_chain_fallback_per_artifact(tmp_path, oracle, artifact):
+    """Kill a session mid-level, corrupt one artifact of its newest step,
+    resume: `load_session` recovers from the previous committed step —
+    reported in RunHealth (except a missing COMMIT, which the protocol
+    already treats as 'never happened')."""
+    g, cfg = _graph(), _cfg(execution="batched")
+    faults.install(FaultPlan(
+        [FaultSpec("session.snapshot", "crash", at=3)]))
+    try:
+        with pytest.raises(InjectedCrash):
+            MiningSession(g, cfg, tmp_path, checkpoint_every=1,
+                          keep_last=100).run()
+    finally:
+        faults.clear()
+    ckpt.wait_pending(raise_errors=False)
+    steps = ckpt.committed_steps(tmp_path)
+    assert len(steps) >= 2, "need a retained chain to fall back across"
+    newest = tmp_path / f"step_{steps[-1]:08d}"
+    if artifact == "array":
+        # a mid-level snapshot carries the in-flight group's device arrays
+        arrs = [f for f in sorted(newest.glob("arr_*.npy"))
+                if f.stat().st_size > 128]
+        assert arrs, "expected a payload-bearing mid-level snapshot"
+        data = bytearray(arrs[0].read_bytes())
+        data[-1] ^= 0x01  # silent payload rot — only the CRC can see it
+        arrs[0].write_bytes(bytes(data))
+    elif artifact == "manifest":
+        (newest / "manifest.json").write_text('{"half": tru')
+    else:
+        (newest / "COMMIT").unlink()
+
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1,
+                            keep_last=100).run()
+    assert _norm(resumed) == _norm(oracle)
+    if artifact != "commit":
+        assert resumed.health.count("restore_fallback") >= 1, \
+            resumed.health.to_dict()
+    if artifact == "array":
+        assert resumed.health.count("checksum_mismatch") >= 1, \
+            resumed.health.to_dict()
+
+
+def test_chain_fallback_every_step_corrupt_degrades_to_fresh(tmp_path):
+    """Worst case: the whole retained chain is corrupt — the session
+    starts fresh (degraded, never wrong) and records every skipped step."""
+    g, cfg = _graph(), _cfg(execution="batched")
+    ref = MiningSession(g, cfg, tmp_path, checkpoint_every=0,
+                        keep_last=100).run()
+    steps = ckpt.committed_steps(tmp_path)
+    assert steps
+    for s in steps:
+        (tmp_path / f"step_{s:08d}" / "manifest.json").write_text("junk")
+    again = MiningSession(g, cfg, tmp_path, checkpoint_every=0,
+                          keep_last=100).run()
+    assert _norm(again) == _norm(ref)
+    assert again.health.count("restore_fallback") == len(steps), \
+        again.health.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: overflow escalation (auto-derived cap overflowed)
+# ---------------------------------------------------------------------------
+
+def test_overflow_escalation_restores_forced_plane_equality(monkeypatch):
+    """ISSUE 9 acceptance: on a graph whose auto-derived cap overflows,
+    the escalation pass re-runs just the overflowed patterns at base cap
+    and the auto result equals forced batched bit-for-bit — closing the
+    'preserves results whenever no level overflows the derived cap'
+    equality hole.  CAP_FLOOR/CAP_HEADROOM are squeezed so the planner
+    right-sizes aggressively enough to overflow on a tiny graph."""
+    monkeypatch.setattr(planner_lib, "CAP_FLOOR", 1)
+    monkeypatch.setattr(planner_lib, "CAP_HEADROOM", 1)
+    g = rmat_graph(96, 700, n_labels=1, seed=11, undirected=True)
+    base = MatchConfig(cap=8192, root_block=16, chunk=16, max_chunks=4,
+                       bisect_iters=7)
+    cfg_auto = MiningConfig(sigma=6, lam=1.0, metric="mis", complete=True,
+                            max_pattern_size=3, match=base,
+                            execution="auto")
+    cfg_forced = dataclasses.replace(cfg_auto, execution="batched")
+    res_auto = mine(g, cfg_auto)
+    res_forced = mine(g, cfg_forced)
+    # the premise: some level really did overflow its derived cap
+    assert res_auto.health.count("overflow_escalation") >= 1, \
+        res_auto.health.to_dict()
+    # the property: equality anyway ("plan" is auto-only; dispatch counts
+    # legitimately include the escalation re-runs; peak_device_bytes is an
+    # accounting property of the executed geometry — derived cap vs base
+    # cap — not of the mined result)
+    drop = ("wall_s", "plan", "dispatches")
+    na = _norm(res_auto, drop_level_keys=drop)
+    nf = _norm(res_forced, drop_level_keys=drop)
+    na.pop("peak")
+    nf.pop("peak")
+    assert na == nf
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: distributed → batched plane fallback
+# ---------------------------------------------------------------------------
+
+def test_distributed_fallback_to_batched():
+    """Every distributed level failing degrades the whole run to the
+    batched plane — full bit-identity with forced batched, plus a
+    plane_fallback health event per level."""
+    g = _graph()
+    cfg = _cfg("mis_luby", execution="distributed")
+    oracle = mine(g, dataclasses.replace(cfg, execution="batched"))
+    faults.install(FaultPlan(
+        [FaultSpec("level.distributed", "error", at=1, times=99)]))
+    try:
+        res = mine(g, cfg)
+    finally:
+        faults.clear()
+    assert res.health.count("plane_fallback") >= 1, res.health.to_dict()
+    assert _norm(res) == _norm(oracle)
+
+
+def test_distributed_fallback_session_killed_and_resumed(tmp_path):
+    """A session killed mid-level *after* the plane fallback resumes onto
+    the rewritten (batched) plan — the recorded plan overrides the forced
+    distributed execution for the in-flight level."""
+    g = _graph()
+    cfg = _cfg("mis_luby", execution="distributed")
+    oracle = mine(g, dataclasses.replace(cfg, execution="batched"))
+    plan = FaultPlan([
+        FaultSpec("level.distributed", "error", at=1, times=99),
+        FaultSpec("session.snapshot", "crash", at=2),
+    ])
+    res = _run_with_faults(g, cfg, tmp_path, plan, checkpoint_every=1,
+                           keep_last=100)
+    assert any(f["point"] == "session.snapshot" for f in plan.fired)
+    assert res.health.count("plane_fallback") >= 1
+    assert _supports(res) == _supports(oracle)
+
+
+# ---------------------------------------------------------------------------
+# preemption (in-process half; the SIGTERM/CLI half lives in tests/launch)
+# ---------------------------------------------------------------------------
+
+def test_preempt_cuts_committed_snapshot_and_resumes(tmp_path):
+    g, cfg = _graph(), _cfg(execution="batched")
+    oracle = mine(g, cfg)
+    sess = MiningSession(g, cfg, tmp_path, checkpoint_every=1)
+    sess.request_preempt()
+    with pytest.raises(PreemptedError):
+        sess.run()
+    # the preempted run left a consistent, committed snapshot…
+    assert ckpt.latest_step(tmp_path) is not None
+    assert sess.health.count("preempted") == 1
+    # …that a later session resumes to the bit-identical result
+    resumed = MiningSession(g, cfg, tmp_path, checkpoint_every=1).run()
+    assert _norm(resumed) == _norm(oracle)
+
+
+def test_fault_plan_env_roundtrip(monkeypatch):
+    """CI drives subprocess chaos through REPRO_FAULT_PLAN."""
+    monkeypatch.setenv(
+        faults.FAULT_PLAN_ENV,
+        '{"seed": 3, "faults": [{"point": "session.snapshot", '
+        '"kind": "crash", "at": 2, "times": 1}]}')
+    faults.clear()  # re-arm env pickup
+    plan = faults.active()
+    assert plan is not None and plan.seed == 3
+    assert plan.specs == [FaultSpec("session.snapshot", "crash", at=2)]
+    faults.clear()
