@@ -30,6 +30,13 @@ subtracted as-is) and the residuals land in ``row_time_{mni,frac,luby}_s``
 — `CostModel.row_time(metric)` falls back to the ``mis`` constant for
 anything unprobed, so schema-1 files keep loading.
 
+Schema 3 adds ``escalation_fraction`` — the measured fraction of sampled
+patterns that escalated to the exact pass, folded in after each launch
+run by `repro.core.planner.persist_escalation_fraction` (this fit writes
+``None`` on a fresh file and preserves any existing measurement);
+`CostModel.esc_prior()` uses it to warm-start the auto planner's
+sampled-plane pricing when a level has no telemetry of its own.
+
 The result is a tiny JSON (`planner_calibration.json` by default — the
 file `repro.core.planner.load_calibration` picks up from the working
 directory or ``$REPRO_PLANNER_CALIBRATION``).  ``benchmarks/run.py``
@@ -137,6 +144,11 @@ def fit_cost_model(iters: int = 20) -> dict:
         "lane_time_s": float(lane_time),
         "row_time_s": float(row_time),
         **metric_rows,
+        # schema 3: measured per-run escalation fraction — not a timing
+        # probe; `repro.launch.mine` folds the observed value in after
+        # each sampled run (`planner.persist_escalation_fraction`) and
+        # `write_calibration` carries any existing measurement forward
+        "escalation_fraction": None,
         "vmap_factor": float(round(vmap_factor, 3)),
         "backend": jax.default_backend(),
         "source": "benchmarks/calibrate.py",
@@ -160,6 +172,15 @@ def write_calibration(out: Optional[str] = None, iters: int = 20) -> str:
 
     out = out or DEFAULT_CALIBRATION_FILE
     model = fit_cost_model(iters=iters)
+    try:
+        # a re-fit refreshes the timing constants but must not discard the
+        # mining-measured escalation fraction accumulated by launch runs
+        with open(out) as f:
+            prev = json.load(f).get("escalation_fraction")
+        if isinstance(prev, (int, float)):
+            model["escalation_fraction"] = float(prev)
+    except (OSError, ValueError):
+        pass
     with open(out, "w") as f:
         json.dump(model, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -56,10 +56,11 @@ class _RowCollector(io.TextIOBase):
     GFLOP/s, counts …); for the plane-equivalence families
     (``exec_time/expansion_plane/*``, ``kernel/frontier_expand_pallas*``)
     it is the bit-exactness indicator and is surfaced as ``parity``
-    (1.0 = bit-exact), null elsewhere.  ``exec_time/sampled/*`` rows
-    additionally carry their own ``accuracy`` column (1.0 = frequent set
-    identical to the forced-batched oracle) — persisted so the
-    regression gate can fail on exactness loss, not just latency.
+    (1.0 = bit-exact), null elsewhere.  ``exec_time/sampled/*`` and
+    ``exec_time/auto_sampled/*`` rows additionally carry their own
+    ``accuracy`` column (1.0 = frequent set identical to the
+    forced-batched oracle) — persisted so the regression gate can fail
+    on exactness loss, not just latency.
     """
 
     _PARITY_FAMILIES = ("exec_time/expansion_plane/",
@@ -108,6 +109,34 @@ class _RowCollector(io.TextIOBase):
         except (KeyError, ValueError):
             pass  # rows without an accuracy column stay schema-compatible
         self.rows.append(entry)
+
+
+def _env_stamp() -> dict:
+    """Host/runtime provenance stamped into the trajectory file.
+
+    Two smoke points only diff meaningfully when they ran on comparable
+    hardware; the stamp lets the regression gate's reader (and a human
+    reading the JSON) tell a real regression from a host change.
+    """
+    import platform
+    import socket
+
+    env = {
+        "host": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+
+        env["jax_version"] = jax.__version__
+        env["device_count"] = jax.device_count()
+        env["device_platforms"] = sorted({d.platform for d in jax.devices()})
+    except Exception:  # trajectory must still be written on a broken jax
+        env["jax_version"] = None
+        env["device_count"] = 0
+        env["device_platforms"] = []
+    return env
 
 
 def main(argv=None) -> int:
@@ -194,6 +223,7 @@ def main(argv=None) -> int:
         trajectory = {
             "schema": 1,
             "smoke": True,
+            "env": _env_stamp(),
             "failures": failures,
             "modules": modules,
             "rows": collector.rows,

@@ -33,6 +33,7 @@ DEFAULT_FAMILIES = (
     "exec_time/batched_level/",
     "exec_time/gnutella/",
     "exec_time/sampled/",
+    "exec_time/auto_sampled/",
 )
 
 

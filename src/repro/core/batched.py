@@ -89,12 +89,17 @@ MIS_EXACT_BLOCKS_PER_DISPATCH = 8
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _step_fn(metric: str, k: int, cfg: MatchConfig, unbatched: bool = False):
+def _step_fn(metric: str, k: int, cfg: MatchConfig, unbatched: bool = False,
+             capture: bool = False):
     """Jitted batched block step for one (metric, k, match geometry).
 
     Signature of the returned callable:
         step(dev_g, plans, block_start, state, taus)
             -> (state', values, found, overflowed, peaks)
+    With ``capture=True`` two more outputs are appended — ``emb`` (P, cap,
+    k) int32 and ``n_valid`` (P,) int32, `match_block`'s raw embedding
+    table — which the sampled plane records per (pattern, block) so exact
+    escalation can *replay* the block instead of re-matching it.
 
     Shapes/dtypes (P = padded pattern-bucket size, n = graph vertices):
       dev_g:   DeviceGraph pytree (unbatched; broadcasts over P).
@@ -131,21 +136,25 @@ def _step_fn(metric: str, k: int, cfg: MatchConfig, unbatched: bool = False):
             else:
                 bm, cnt = mis_lib.mis_luby_update(
                     bm, cnt, emb, n_valid, tau, k, g.n)
+            if capture:
+                return bm, cnt, found, ovf, peak, emb, n_valid
             return bm, cnt, found, ovf, peak
 
         def step(g, plans, block_start, state, taus):
             bitmaps, counts = state
             if unbatched:
                 squeeze = jax.tree_util.tree_map(lambda a: a[0], plans)
-                bm, cnt, found, ovf, peak = step_one(
+                out = step_one(
                     g, squeeze, block_start, bitmaps[0], counts[0], taus[0])
-                return ((bm[None], cnt[None]), cnt[None], found[None],
-                        ovf[None], peak[None])
-            bitmaps, counts, found, ovf, peak = jax.vmap(
+                bm, cnt = out[0], out[1]
+                rest = tuple(x[None] for x in out[2:])
+                return ((bm[None], cnt[None]), cnt[None]) + rest
+            out = jax.vmap(
                 lambda plan, bm, cnt, tau: step_one(
                     g, plan, block_start, bm, cnt, tau))(
                 plans, bitmaps, counts, taus)
-            return (bitmaps, counts), counts, found, ovf, peak
+            bitmaps, counts = out[0], out[1]
+            return ((bitmaps, counts), counts) + tuple(out[2:])
 
     elif metric in ("mni", "frac"):
 
@@ -158,25 +167,99 @@ def _step_fn(metric: str, k: int, cfg: MatchConfig, unbatched: bool = False):
             else:
                 table = metrics_lib.frac_update(table, emb, n_valid, k)
                 value = metrics_lib.frac_value(table)
+            if capture:
+                return table, value, found, ovf, peak, emb, n_valid
             return table, value, found, ovf, peak
 
         def step(g, plans, block_start, state, taus):
             del taus  # MNI/frac need no device-side τ; the host owns early exit
             if unbatched:
                 squeeze = jax.tree_util.tree_map(lambda a: a[0], plans)
-                table, value, found, ovf, peak = step_one(
-                    g, squeeze, block_start, state[0])
-                return (table[None], value[None], found[None], ovf[None],
-                        peak[None])
-            state, values, found, ovf, peak = jax.vmap(
+                out = step_one(g, squeeze, block_start, state[0])
+                return tuple(x[None] for x in out)
+            out = jax.vmap(
                 lambda plan, table: step_one(g, plan, block_start, table))(
                 plans, state)
-            return state, values, found, ovf, peak
+            return out
 
     else:
         raise ValueError(f"metric {metric!r} has no batched step")
 
     return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=None)
+def _replay_step_fn(metric: str, k: int, n: int):
+    """Jitted update-only block step — escalation's replay of a recorded
+    sample block.
+
+    Signature: ``step(state, emb, n_valid, taus) -> (state', values)`` with
+    ``emb`` (P, cap, k) int32 / ``n_valid`` (P,) int32 being a recorded
+    `match_block` output.  Applies exactly the metric update the full step
+    would have applied — same embedding rows, same order, same device-side
+    τ guard — without re-running the expansion grid, so a replayed block's
+    metric state transition is bit-identical to the matched one.
+    """
+
+    if metric in ("mis", "mis_luby"):
+
+        def step_one(emb, n_valid, bm, cnt, tau):
+            if metric == "mis":
+                return mis_lib.mis_greedy_update(bm, cnt, emb, n_valid,
+                                                 tau, k)
+            return mis_lib.mis_luby_update(bm, cnt, emb, n_valid, tau, k, n)
+
+        def step(state, emb, n_valid, taus):
+            bitmaps, counts = jax.vmap(step_one)(emb, n_valid, *state, taus)
+            return (bitmaps, counts), counts
+
+    elif metric in ("mni", "frac"):
+
+        def step_one(emb, n_valid, table):
+            if metric == "mni":
+                table = metrics_lib.mni_update(table, emb, n_valid, k)
+                return table, metrics_lib.mni_value(table)
+            table = metrics_lib.frac_update(table, emb, n_valid, k)
+            return table, metrics_lib.frac_value(table)
+
+        def step(state, emb, n_valid, taus):
+            del taus
+            return jax.vmap(step_one)(emb, n_valid, state)
+
+    else:
+        raise ValueError(f"metric {metric!r} has no replay step")
+
+    return jax.jit(step)
+
+
+def _replay_arrays(replay, bucket_map: np.ndarray, b: int, cap: int, k: int):
+    """Assemble one replayed block's device inputs + host accounting.
+
+    ``replay`` is the group's per-pattern replay table (group index →
+    {schedule position → {"emb", "found", "ovf", "peak"}}).  Pad rows
+    (bucket_map == −1) get empty embeddings — their τ guard is 0 and their
+    accounting rows are dead, exactly like pad rows of a matched step.
+    """
+    P = int(bucket_map.size)
+    emb = np.full((P, cap, k), -1, np.int32)
+    nv = np.zeros(P, np.int32)
+    found = np.zeros(P, np.int32)
+    ovf = np.zeros(P, bool)
+    peak = np.zeros(P, np.int32)
+    for row in range(P):
+        gi = int(bucket_map[row])
+        if gi < 0:
+            continue
+        rec = replay[gi][b]
+        rows = np.asarray(rec["emb"], np.int32).reshape(-1, k)
+        c = int(rows.shape[0])
+        if c:
+            emb[row, :c] = rows
+        nv[row] = c
+        found[row] = int(rec["found"])
+        ovf[row] = bool(rec["ovf"])
+        peak[row] = int(rec["peak"])
+    return emb, nv, found, ovf, peak
 
 
 def program_cache_stats():
@@ -269,6 +352,9 @@ class LevelTelemetry:
     # length ⌈n/root_block⌉) — the sampled plane's occupancy weights for
     # the next level's block draw (`core/sampled.py`)
     block_peaks: Optional[np.ndarray] = None
+    # within-level replans: how many times `_mine_group` re-derived its cap
+    # geometry at a shrink boundary (auto plane only; see ``replan``)
+    replans: int = 0
     # sampled-plane summary (fraction, escalations, CI widths); None on
     # the other planes — `mine()` records it as per_level["sampled"]
     sampled: Optional[dict] = None
@@ -298,6 +384,11 @@ class GroupState:
     # per-block peak occupancy by block id (see LevelTelemetry.block_peaks);
     # carried so a resumed group reports identical occupancy telemetry
     block_peaks: Optional[np.ndarray] = None
+    # within-level replanning (auto plane): the group's *current* frontier
+    # cap and how many times it was re-derived — carried so a resumed
+    # group continues with the identical (possibly shrunk) geometry
+    cap: Optional[int] = None
+    replans: int = 0
 
 
 def level_groups(patterns: Sequence[Pattern], max_batch: int):
@@ -328,9 +419,35 @@ def _mine_group(
     resume: Optional[GroupState] = None,
     on_block=None,
     block_order: Optional[np.ndarray] = None,
-) -> Tuple[List[Optional[PatternOutcome]], bool, int, np.ndarray]:
+    replay: Optional[List[dict]] = None,
+    emb_sink=None,
+    replan: bool = False,
+    counters: Optional[dict] = None,
+) -> Tuple[List[Optional[PatternOutcome]], bool, int, np.ndarray, int]:
     """Run one same-k candidate group level-wise; returns
-    (outcomes, timed_out, dispatches, block_peaks).
+    (outcomes, timed_out, dispatches, block_peaks, replans).
+
+    ``replay`` (escalation reuse): per-pattern tables {schedule position →
+    {"emb", "found", "ovf", "peak"}} recorded by the sample pass.  At a
+    schedule position every live pattern has a record for, the loop applies
+    the recorded embeddings through `_replay_step_fn` — the identical
+    metric update, minus the expansion grid — instead of re-matching the
+    block.  ``emb_sink(b, emb, n_valid, found, ovf, peak, bucket_map)`` is
+    the recording side: when set, steps run in capture mode and the raw
+    `match_block` outputs stream to the callback per block.
+
+    ``replan=True`` (auto plane only) re-derives the frontier cap at
+    shrink-re-stack boundaries: when the live survivors' observed peak
+    occupancy fits a smaller cap with `planner.CAP_HEADROOM`× headroom
+    (never below `planner.CAP_FLOOR`, and never once any live pattern has
+    overflowed), the remaining blocks run at the shrunk geometry.  The
+    current cap and replan count ride in `GroupState` so resumes continue
+    bit-identically; `flexis.mine` re-checks overflow against the full
+    config cap, so a replan that shrinks too far only costs an escalation.
+
+    ``counters`` (optional dict) accumulates {"match_blocks",
+    "replay_blocks"} — the dispatch/block accounting the escalation-reuse
+    tests assert on.
 
     ``block_order`` is the static root-block schedule — a permutation of
     block ids from `planner.root_block_order` (None = vertex-id order), or
@@ -402,6 +519,11 @@ def _mine_group(
         state = jax.tree_util.tree_map(jnp.asarray, resume.state)
         start_block = int(resume.next_block)
         dispatches = int(resume.dispatches)
+    replans = 0 if resume is None else int(getattr(resume, "replans", 0))
+    if resume is not None and resume.cap is not None \
+            and int(resume.cap) != cfg.cap:
+        # continue at the geometry the killed process had replanned to
+        cfg = dataclasses.replace(cfg, cap=int(resume.cap))
     plans_cur = _gather_rows(stack_plans(plans),
                              np.where(bucket_map >= 0, bucket_map, 0))
     taus_dev = bucket_taus(bucket_map)
@@ -413,22 +535,46 @@ def _mine_group(
     # the schedule may be a subset (sampled plane): the loop length is the
     # schedule's, not the graph's
     n_blocks = int(block_order.shape[0])
+    # positions every live pattern can replay (escalation reuse) — the
+    # sample pass drew level-wide, so escalated patterns share one set
+    replay_at = (set(replay[0].keys()) if replay else set())
+    rstep = _replay_step_fn(metric, k, n) if replay_at else None
     # the P=1 bucket compiles without the vmap (fusion win, bit-identical);
     # re-resolved only when a shrink re-stack changes the bucket width
-    step = _step_fn(metric, k, cfg, unbatched=bucket_map.size == 1)
+    capture = emb_sink is not None
+    step = _step_fn(metric, k, cfg, unbatched=bucket_map.size == 1,
+                    capture=capture)
     for b in range(start_block, n_blocks):
         if deadline is not None and time.monotonic() > deadline:
             timed_out = True
             unfinished = {int(i) for i in bucket_map[bucket_map >= 0]}
             break
-        state, values, blk_found, blk_ovf, blk_peak = step(
-            dev_g, plans_cur,
-            jnp.int32(int(block_order[b]) * cfg.root_block), state, taus_dev)
+        if b in replay_at:
+            emb_np, nv_np, found_np, ovf_np, peak_np = _replay_arrays(
+                replay, bucket_map, b, cfg.cap, k)
+            state, values = rstep(
+                state, jnp.asarray(emb_np), jnp.asarray(nv_np), taus_dev)
+            values_np = np.asarray(values)
+            if counters is not None:
+                counters["replay_blocks"] = counters.get(
+                    "replay_blocks", 0) + 1
+        else:
+            out = step(
+                dev_g, plans_cur,
+                jnp.int32(int(block_order[b]) * cfg.root_block), state,
+                taus_dev)
+            state, values, blk_found, blk_ovf, blk_peak = out[:5]
+            values_np = np.asarray(values)
+            found_np = np.asarray(blk_found)
+            ovf_np = np.asarray(blk_ovf)
+            peak_np = np.asarray(blk_peak)
+            if capture:
+                emb_sink(b, np.asarray(out[5]), np.asarray(out[6]),
+                         found_np, ovf_np, peak_np, bucket_map)
+            if counters is not None:
+                counters["match_blocks"] = counters.get(
+                    "match_blocks", 0) + 1
         dispatches += 1
-        values_np = np.asarray(values)
-        found_np = np.asarray(blk_found)
-        ovf_np = np.asarray(blk_ovf)
-        peak_np = np.asarray(blk_peak)
 
         live = bucket_map >= 0
         gi = bucket_map[live]
@@ -459,8 +605,25 @@ def _mine_group(
                 state = _gather_rows(state, sel)
                 bucket_map = np.concatenate([still, np.full(pad, -1)])
                 taus_dev = bucket_taus(bucket_map)
+                if replan and not ovf[still].any():
+                    # within-level replanning: the survivors' measured peak
+                    # may fit a much smaller frontier cap — re-derive it
+                    # with the planner's headroom/floor rails (never once a
+                    # live pattern has overflowed: truncation is the only
+                    # cap-dependent behaviour and it must stay flagged)
+                    from .planner import CAP_FLOOR, CAP_HEADROOM
+                    live_peak = int(max_count[still].max())
+                    if live_peak > 0:
+                        new_cap = min(cfg.cap,
+                                      max(_bucket_size(CAP_HEADROOM
+                                                       * live_peak),
+                                          CAP_FLOOR))
+                        if new_cap < cfg.cap:
+                            cfg = dataclasses.replace(cfg, cap=new_cap)
+                            replans += 1
                 step = _step_fn(metric, k, cfg,
-                                unbatched=bucket_map.size == 1)
+                                unbatched=bucket_map.size == 1,
+                                capture=capture)
             elif still.size < gi.size:
                 # same bucket; just stop accounting for the finished patterns
                 bucket_map = np.where(np.isin(bucket_map, still), bucket_map, -1)
@@ -471,7 +634,8 @@ def _mine_group(
                 supports=supports.copy(), found=found.copy(),
                 overflowed=ovf.copy(), blocks_run=blocks_run.copy(),
                 dispatches=dispatches, max_count=max_count.copy(),
-                block_peaks=block_peaks.copy()))
+                block_peaks=block_peaks.copy(), cap=int(cfg.cap),
+                replans=replans))
 
     outcomes: List[Optional[PatternOutcome]] = [
         None if i in unfinished else PatternOutcome(
@@ -484,7 +648,7 @@ def _mine_group(
         )
         for i in range(P0)
     ]
-    return outcomes, timed_out, dispatches, block_peaks
+    return outcomes, timed_out, dispatches, block_peaks, replans
 
 
 def evaluate_level_batched(
@@ -500,8 +664,16 @@ def evaluate_level_batched(
     max_batch: int = DEFAULT_MAX_BATCH,
     hooks=None,
     block_order: Optional[np.ndarray] = None,
+    replay: Optional[List[dict]] = None,
+    replan: bool = False,
+    counters: Optional[dict] = None,
 ) -> Tuple[List[Optional[PatternOutcome]], bool, LevelTelemetry]:
     """Evaluate a whole candidate level with the batched data plane.
+
+    ``replay``/``replan``/``counters`` thread through to `_mine_group`
+    (escalation reuse, within-level replanning, block accounting — see its
+    docstring); ``replay`` aligns with ``patterns`` and is sliced per
+    group.
 
     Args:
       host_g/dev_g: the data graph and its device mirror.
@@ -548,6 +720,9 @@ def evaluate_level_batched(
         done_peaks = rbp() if rbp is not None else None
         if done_peaks is not None:
             peaks = np.maximum(peaks, np.asarray(done_peaks, np.int64))
+        rr = getattr(hooks, "resume_replans", None)
+        if rr is not None:
+            telemetry.replans = int(rr())
     for k, lo, idxs in level_groups(patterns, max_batch):
         # state_bytes is pure arithmetic — account skipped groups too, so a
         # resumed level reports the same peak as the uninterrupted one
@@ -565,17 +740,22 @@ def evaluate_level_batched(
         resume = hooks.group_resume(k, lo) if hooks is not None else None
         on_block = (functools.partial(hooks.on_group_state, k, lo)
                     if hooks is not None else None)
-        got, group_timed_out, dispatches, group_peaks = _mine_group(
-            dev_g, plans, group_taus, metric, cfg,
-            complete=complete, n=host_g.n, deadline=deadline,
-            resume=resume, on_block=on_block, block_order=block_order)
+        group_replay = None if replay is None else [replay[i] for i in idxs]
+        got, group_timed_out, dispatches, group_peaks, group_replans = \
+            _mine_group(
+                dev_g, plans, group_taus, metric, cfg,
+                complete=complete, n=host_g.n, deadline=deadline,
+                resume=resume, on_block=on_block, block_order=block_order,
+                replay=group_replay, replan=replan, counters=counters)
         telemetry.dispatches += dispatches
+        telemetry.replans += group_replans
         peaks = np.maximum(peaks, group_peaks)
         for i, out in zip(idxs, got):
             outcomes[i] = out
         if hooks is not None and not group_timed_out:
             hooks.on_group_done(k, lo, idxs, got, dispatches,
-                                block_peaks=[int(x) for x in group_peaks])
+                                block_peaks=[int(x) for x in group_peaks],
+                                replans=group_replans)
         if group_timed_out:
             timed_out = True
             break

@@ -84,14 +84,15 @@ class MiningConfig:
     # completed metric values are deterministic *within* a schedule
     # (mIS priority = embedding-row order along it).
     root_order: str = "degree"
-    # sampled plane knobs (ignored by every other execution mode).  All
-    # four join the session config fingerprint, so a --resume with a
-    # different sample schedule raises SessionMismatch instead of silently
-    # mixing two different draws.
+    # sampled plane knobs (also consulted when execution="auto" prices a
+    # sampled pass).  All of them join the session config fingerprint, so
+    # a --resume with a different sample schedule raises SessionMismatch
+    # instead of silently mixing two different draws.
     sample_fraction: float = 0.25   # target fraction of root blocks drawn
     confidence: float = 0.95        # nominal CI level for the estimator
     sample_seed: int = 0            # RNG key root for the per-level draws
     escalate: bool = True           # False = pure estimates (no exactness)
+    sample_rounds: int = 3          # max adaptive draw rounds per level
 
     def __post_init__(self):
         if self.metric not in _METRICS:
@@ -121,6 +122,8 @@ class MiningConfig:
             raise ValueError("sample_fraction must be in (0, 1]")
         if not (0.0 < self.confidence < 1.0):
             raise ValueError("confidence must be in (0, 1)")
+        if self.sample_rounds < 1:
+            raise ValueError("sample_rounds must be >= 1")
 
 
 @dataclasses.dataclass
@@ -473,7 +476,8 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None,
                     sample=plan.sample, confidence=cfg.confidence,
                     escalate=cfg.escalate, complete=cfg.complete,
                     deadline=deadline, max_batch=plan.max_batch,
-                    hooks=level_hooks, block_order=block_order)
+                    hooks=level_hooks, block_order=block_order,
+                    sample_rounds=cfg.sample_rounds)
             elif plane == "distributed":
                 from . import distributed as distributed_lib
 
@@ -520,11 +524,15 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None,
                         max_batch=plan.max_batch, hooks=level_hooks,
                         block_order=block_order)
             else:
+                # within-level replanning is an auto-plane behaviour: the
+                # forced batched plane is the bit-identity oracle and must
+                # keep the config geometry verbatim
                 outcomes, lvl_timed_out, tel = batched_lib.evaluate_level_batched(
                     g, dev_g, eval_pats, eval_taus, cfg.metric, plan.match,
                     complete=cfg.complete, deadline=deadline,
                     max_batch=plan.max_batch, hooks=level_hooks,
-                    block_order=block_order)
+                    block_order=block_order,
+                    replan=cfg.execution == "auto")
             timed_out |= lvl_timed_out
             lvl_dispatches += tel.dispatches
             lvl_max_count = max(lvl_max_count, tel.max_count)
@@ -541,7 +549,12 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None,
             # escalates identically.
             esc = [i for i, o in enumerate(outcomes)
                    if o is not None and o.overflowed]
-            if esc and plan.match.cap < cfg.match.cap and not timed_out:
+            # a within-level replan can shrink the cap below the plan's,
+            # so replans make the level escalation-eligible even when the
+            # plan kept the base geometry
+            replanned = tel is not None and getattr(tel, "replans", 0) > 0
+            if esc and not timed_out \
+                    and (plan.match.cap < cfg.match.cap or replanned):
                 re_out, re_to, re_tel = batched_lib.evaluate_level_batched(
                     g, dev_g, [eval_pats[i] for i in esc],
                     [eval_taus[i] for i in esc], cfg.metric, cfg.match,
@@ -651,15 +664,16 @@ def mine(g: DataGraph, cfg: MiningConfig, *, hooks=None,
         }
         if cfg.execution in ("auto", "sampled"):
             per_level[level]["plan"] = plan.to_dict()
-        if cfg.execution == "sampled":
-            # sampled-only telemetry keys: cross-plane per_level comparisons
-            # (the batched ≡ sequential ≡ auto tests) must not see them
+            # planner-input telemetry: cross-plane per_level comparisons
+            # (the batched ≡ sequential ≡ auto tests) drop these keys
             if tel is not None and tel.sampled is not None:
                 per_level[level]["sampled"] = tel.sampled
             if tel is not None and tel.block_peaks is not None:
                 # block-id indexed peak occupancy — next level's draw weights
                 per_level[level]["block_peaks"] = [
                     int(x) for x in tel.block_peaks]
+        if cfg.execution == "auto" and tel is not None:
+            per_level[level]["replans"] = int(getattr(tel, "replans", 0))
         if timed_out or not level_frequent:
             cp = []
         elif (cfg.generation == "merge"

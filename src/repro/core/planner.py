@@ -75,17 +75,19 @@ from .matcher import MatchConfig
 __all__ = [
     "CostModel", "LevelPlan", "ExecutionPlanner", "block_degree_stat",
     "root_block_order", "DEFAULT_CALIBRATION_FILE", "load_calibration",
+    "persist_escalation_fraction",
 ]
 
 # calibration file the planner looks for (cwd-relative; override with the
 # REPRO_PLANNER_CALIBRATION env var).  Written by `benchmarks/calibrate.py`.
 DEFAULT_CALIBRATION_FILE = "planner_calibration.json"
 CALIBRATION_ENV = "REPRO_PLANNER_CALIBRATION"
-# schema 2 added per-metric row times (row_time_{mni,frac,luby}_s); schema-1
-# files (single mis-fitted row_time_s) still load — the missing constants
-# fall back to the shared one
-CALIBRATION_SCHEMA = 2
-CALIBRATION_SCHEMAS = (1, 2)
+# schema 2 added per-metric row times (row_time_{mni,frac,luby}_s); schema 3
+# added the measured escalation fraction (escalation_fraction — the sampled
+# plane's pricing warm-start).  Schema-1/2 files still load — the missing
+# constants fall back to the shared one / the ESCALATION_PRIOR constant.
+CALIBRATION_SCHEMA = 3
+CALIBRATION_SCHEMAS = (1, 2, 3)
 
 # cap right-sizing safety rails (see module docstring / docs/architecture.md)
 CAP_HEADROOM = 4        # derived cap ≥ headroom × observed peak occupancy
@@ -100,6 +102,28 @@ ESCALATION_PRIOR = 0.25
 # below this many root blocks a sample cannot both draw ≥1 block and leave
 # ≥1 out — the plan falls back to the exact batched plane
 MIN_SAMPLED_BLOCKS = 2
+# auto only picks the sampled plane when its priced cost undercuts the
+# batched row by this factor — a win margin that absorbs the model's own
+# error (escalation prediction, replay pricing) before auto gambles on a
+# statistical plane whose worst case is "everything escalates"
+SAMPLED_MARGIN = 0.9
+
+
+def hidden_mass_bound(confidence: float, f_cov: float) -> float:
+    """Max support the unsampled blocks can hide at the CI confidence.
+
+    Mirrors `sampled.ht_interval`'s zero-mass hidden-block bound: with
+    covered probability mass ``f_cov``, a pattern whose sample saw nothing
+    can still hold up to ``ln(1−confidence)/ln(1−f_cov)`` embeddings before
+    the miss probability drops below ``1−confidence``.  The planner uses it
+    as an eligibility gate: when a level's smallest τ is below this bound,
+    even zero-mass (i.e. hopeless) patterns escalate and the sample pass is
+    pure overhead.
+    """
+    if f_cov >= 1.0:
+        return 0.0
+    alpha = max(1e-12, 1.0 - confidence)
+    return math.log(alpha) / math.log(max(1e-300, 1.0 - f_cov))
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +176,12 @@ class CostModel:
     row_time_mni_s: Optional[float] = None
     row_time_frac_s: Optional[float] = None
     row_time_luby_s: Optional[float] = None
+    # schema 3: measured per-run escalation fraction of the sampled plane
+    # (escalated / classified, persisted by `launch/mine.py` after a
+    # sampled run) — warm-starts the auto pricing's escalation predictor
+    # when a level has no telemetry of its own yet.  None (schema-1/2
+    # files, fresh fits) falls back to the ESCALATION_PRIOR constant.
+    escalation_fraction: Optional[float] = None
     source: str = "defaults"
 
     def to_dict(self) -> Dict[str, Any]:
@@ -164,6 +194,7 @@ class CostModel:
             "row_time_mni_s": self.row_time_mni_s,
             "row_time_frac_s": self.row_time_frac_s,
             "row_time_luby_s": self.row_time_luby_s,
+            "escalation_fraction": self.escalation_fraction,
             "source": self.source,
         }
 
@@ -186,6 +217,7 @@ class CostModel:
                 row_time_mni_s=opt("row_time_mni_s"),
                 row_time_frac_s=opt("row_time_frac_s"),
                 row_time_luby_s=opt("row_time_luby_s"),
+                escalation_fraction=opt("escalation_fraction"),
                 source=str(d.get("source", "file")),
             )
         except (TypeError, ValueError):
@@ -214,6 +246,27 @@ class CostModel:
         factor = self.vmap_factor if (batched and bucket > 1) else 1.0
         return (self.dispatch_overhead_s
                 + bucket * self.pattern_work_s(cfg, k, metric) * factor)
+
+    def esc_prior(self) -> float:
+        """Escalation-mass prior: the measured fraction when calibrated
+        (schema 3), the ESCALATION_PRIOR constant otherwise — clamped to
+        [0, 1] so a corrupt calibration can't price a negative pass."""
+        if self.escalation_fraction is None:
+            return ESCALATION_PRIOR
+        return min(1.0, max(0.0, float(self.escalation_fraction)))
+
+    def replay_step_s(self, cfg: MatchConfig, k: int, bucket: int,
+                      *, metric: str = "mis") -> float:
+        """Predicted wall time of ONE update-only replay step.
+
+        Escalation reuse replays a sampled block's recorded embeddings
+        through the metric update without re-running the expansion grid —
+        so the step pays dispatch plus the per-row metric scan, but no
+        ``lanes · lane_time`` term.
+        """
+        factor = self.vmap_factor if bucket > 1 else 1.0
+        return (self.dispatch_overhead_s
+                + bucket * cfg.cap * self.row_time(metric) * factor)
 
 
 def load_calibration(path: Optional[str] = None) -> CostModel:
@@ -260,6 +313,45 @@ def load_calibration(path: Optional[str] = None) -> CostModel:
         d["source"] = str(p)
         return CostModel.from_dict(d)
     return CostModel()
+
+
+def persist_escalation_fraction(fraction: float,
+                                path: Optional[str] = None) -> Optional[str]:
+    """Fold a run's measured escalation fraction into the calibration file.
+
+    The sampled-plane pricing (`ExecutionPlanner._price_sampled`) falls
+    back to ``ESCALATION_PRIOR`` when a level has no telemetry; persisting
+    the measured fraction (schema 3) warm-starts the next run's prior from
+    real data.  EMA with weight 0.5 against any existing value smooths
+    run-to-run noise.  Resolution mirrors `load_calibration` (argument →
+    env → cwd default); schema-1/2 files are upgraded in place, other
+    existing constants are preserved, and any I/O or parse problem is
+    swallowed (calibration is an optimization, never a correctness input).
+    Returns the path written, or None.
+    """
+    frac = min(1.0, max(0.0, float(fraction)))
+    target = path or os.environ.get(CALIBRATION_ENV) \
+        or DEFAULT_CALIBRATION_FILE
+    p = Path(target)
+    d: Dict[str, Any] = {}
+    if p.is_file():
+        try:
+            loaded = json.loads(p.read_text())
+            if (isinstance(loaded, dict)
+                    and loaded.get("schema") in CALIBRATION_SCHEMAS):
+                d = loaded
+        except (OSError, ValueError):
+            pass
+    prev = d.get("escalation_fraction")
+    if isinstance(prev, (int, float)):
+        frac = 0.5 * float(prev) + 0.5 * frac
+    d["schema"] = CALIBRATION_SCHEMA
+    d["escalation_fraction"] = frac
+    try:
+        p.write_text(json.dumps(d, indent=2, sort_keys=True) + "\n")
+    except OSError:
+        return None
+    return str(p)
 
 
 # ---------------------------------------------------------------------------
@@ -316,9 +408,17 @@ class LevelPlan:
     # sampled plane only: the level's recorded block draw —
     # {"fraction", "n_sample", "positions" (schedule indices), "pis"
     # (inclusion probabilities), "key" (RNG key words), "weights"
-    # ("occupancy" | "degree")}.  Part of to_dict/from_dict, so a resumed
-    # level replays the *identical* sample instead of re-drawing.
+    # ("occupancy" | "degree"), "w" (full schedule-ordered weight vector —
+    # what the adaptive rounds redraw from)}.  Part of to_dict/from_dict,
+    # so a resumed level replays the *identical* sample instead of
+    # re-drawing.
     sample: Optional[Dict[str, Any]] = None
+    # auto pricing record: every input of the sampled-vs-batched decision
+    # ({"batched_s", "sampled_s", "replay_s", "fraction", "esc",
+    # "esc_source", "margin", "tau_min", "hidden_bound", "chosen"}) —
+    # recorded whenever auto evaluated the sampled plane, chosen or not,
+    # and replayed verbatim on resume (part of to_dict/from_dict).
+    pricing: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         """The decision as recorded in per_level / session snapshots.
@@ -340,6 +440,8 @@ class LevelPlan:
         }
         if self.sample is not None:
             d["sample"] = self.sample
+        if self.pricing is not None:
+            d["pricing"] = self.pricing
         return d
 
     @classmethod
@@ -354,7 +456,8 @@ class LevelPlan:
             two_phase=bool(d["two_phase"]),
         )
         return cls(plane=str(d["plane"]), match=match,
-                   max_batch=int(d["max_batch"]), sample=d.get("sample"))
+                   max_batch=int(d["max_batch"]), sample=d.get("sample"),
+                   pricing=d.get("pricing"))
 
 
 class ExecutionPlanner:
@@ -494,7 +597,111 @@ class ExecutionPlanner:
                 and self.n_blocks >= 2 * self.n_devices
                 and costs["distributed"] < costs[plane]):
             plane = "distributed"
+        if plane == "batched":
+            sample, pricing = self._price_sampled(
+                level, taus, prev, match,
+                [(sz, k) for k, sz in sizes], max_batch, costs["batched"])
+            if pricing is not None and pricing["chosen"] == "sampled":
+                return LevelPlan(plane="sampled", match=match,
+                                 max_batch=max_batch, sample=sample,
+                                 pricing=pricing)
+            if pricing is not None:
+                return LevelPlan(plane="batched", match=match,
+                                 max_batch=max_batch, pricing=pricing)
         return LevelPlan(plane=plane, match=match, max_batch=max_batch)
+
+    # -- auto sampled pricing -----------------------------------------------
+    def _predict_escalation(self, prev: Optional[Dict[str, Any]]
+                            ) -> Tuple[float, str]:
+        """Predicted escalation mass E[esc] for the next level's sample.
+
+        Predictor chain, most-informed first:
+
+          * ``"telemetry"`` — the previous level ran sampled: its measured
+            escalated/(escalated+pruned) classification split is the best
+            available estimate of how separable supports are from τ;
+          * ``"frontier"`` — the previous level's frequent/searched ratio:
+            frequent parents spawn candidates whose supports sit near τ
+            (they escalate); the infrequent rest prune at the prior's rate;
+          * ``"prior"`` — `CostModel.esc_prior()` (the measured per-run
+            fraction when calibrated, ESCALATION_PRIOR otherwise).
+        """
+        prior = self.cost.esc_prior()
+        if prev is not None:
+            s = prev.get("sampled")
+            if s is not None and not s.get("exact", False):
+                classified = int(s.get("escalated", 0)) + int(
+                    s.get("pruned", 0))
+                if classified > 0:
+                    return (int(s.get("escalated", 0)) / classified,
+                            "telemetry")
+            searched = int(prev.get("searched", 0))
+            if searched > 0:
+                freq = min(1.0, int(prev.get("frequent", 0)) / searched)
+                return min(1.0, freq + prior * (1.0 - freq)), "frontier"
+        return prior, "prior"
+
+    def _price_sampled(self, level: int, taus: Sequence[int],
+                       prev: Optional[Dict[str, Any]], match: MatchConfig,
+                       sizes: List[Tuple[int, int]], max_batch: int,
+                       batched_s: float
+                       ) -> Tuple[Optional[Dict[str, Any]],
+                                  Optional[Dict[str, Any]]]:
+        """Price a sampled pass for one auto level; returns (sample, pricing).
+
+        (None, None) when the level is ineligible (non-batchable metric,
+        escalation disabled, complete run, too few blocks, or τ below the
+        hidden-mass bound — where even zero-support patterns escalate).
+        Otherwise the pricing dict records every decision input plus
+        ``"chosen"``; the sample dict is the recorded draw when sampled won.
+
+        The sampled row prices three phases against the batched row:
+        ``f·batched`` (the sample pass), ``E[esc]·(1−f)·batched`` (match
+        steps over the unsampled schedule) and ``E[esc]·f·replay``
+        (update-only replay of the recorded sample blocks, keeping the
+        schedule permutation intact) — sampled wins only under
+        `SAMPLED_MARGIN`.
+        """
+        cfg = self.cfg
+        m = self.n_blocks
+        from .batched import _BATCHABLE_METRICS
+        if (cfg.metric not in _BATCHABLE_METRICS or cfg.complete
+                or not getattr(cfg, "escalate", True)
+                or m < MIN_SAMPLED_BLOCKS or not taus):
+            return None, None
+        f = min(1.0, max(1, math.ceil(cfg.sample_fraction * m)) / m)
+        if f >= 1.0:
+            return None, None
+        hidden = hidden_mass_bound(cfg.confidence, f)
+        tau_min = int(min(taus))
+        esc, esc_source = self._predict_escalation(prev)
+        rep = 0.0
+        for sz, k in sizes:
+            full, r = divmod(sz, max_batch)
+            for bucket_n in [max_batch] * full + ([r] if r else []):
+                rep += self.cost.replay_step_s(match, k,
+                                               _pow2_ceil(bucket_n),
+                                               metric=cfg.metric)
+        # all terms are per root block (`_level_costs` normalizes — the
+        # block count multiplies every row equally): the sample pass runs
+        # f of the blocks, escalation matches the unsampled (1−f) and
+        # replays the sampled f with the cheap update-only step
+        sampled_s = batched_s * f \
+            + esc * (batched_s * (1.0 - f) + rep * f)
+        pricing = {
+            "batched_s": float(batched_s), "sampled_s": float(sampled_s),
+            "replay_s": float(rep), "fraction": float(f),
+            "esc": float(esc), "esc_source": esc_source,
+            "margin": SAMPLED_MARGIN, "tau_min": tau_min,
+            "hidden_bound": float(hidden),
+        }
+        if tau_min <= hidden or sampled_s >= SAMPLED_MARGIN * batched_s:
+            pricing["chosen"] = "batched"
+            return None, pricing
+        sample = self._draw_block_sample(level, prev, match,
+                                         cfg.sample_fraction)
+        pricing["chosen"] = "sampled"
+        return sample, pricing
 
     # -- sampled plane ------------------------------------------------------
     def _plan_sampled(self, level: int, patterns: Sequence,
@@ -533,26 +740,52 @@ class ExecutionPlanner:
         key = sampled_lib.sample_key(cfg.sample_seed, level)
         n_sample = max(1, math.ceil(cfg.sample_fraction * m))
         # cost-model row for the sample pass: f·batched plus the expected
-        # exact re-spend ESCALATION_PRIOR·(1−f)·batched.  With the prior
-        # < 1 this never exceeds the batched row, but the guard keeps the
-        # plane honest should the prior ever be calibrated past 1.
+        # exact re-spend esc_prior·(1−f)·batched.  With the prior < 1 this
+        # never exceeds the batched row, but the guard keeps the plane
+        # honest should the prior ever be calibrated past 1.
         by_k: Dict[int, int] = {}
         for p in patterns:
             by_k[p.k] = by_k.get(p.k, 0) + 1
         costs = self._level_costs([(sz, k) for k, sz in sorted(by_k.items())],
                                   match, self.choose_bucket(max(by_k.values())))
         f = n_sample / m
-        sampled_cost = costs["batched"] * (f + ESCALATION_PRIOR * (1.0 - f))
+        sampled_cost = costs["batched"] * (f + self.cost.esc_prior()
+                                           * (1.0 - f))
         if sampled_cost > costs["batched"]:
             return LevelPlan(plane="batched", match=match,
                              max_batch=max_batch)
         if n_sample >= m:
             sample = {"fraction": 1.0, "n_sample": int(m),
+                      "n_requested": int(m),
                       "positions": list(range(m)), "pis": [1.0] * m,
-                      "key": key, "weights": "full"}
+                      "key": key, "weights": "full", "w": [1.0] * m}
             return LevelPlan(plane="sampled", match=match,
                              max_batch=max_batch, sample=sample)
+        sample = self._draw_block_sample(level, prev, match,
+                                         cfg.sample_fraction)
+        return LevelPlan(plane="sampled", match=match, max_batch=max_batch,
+                         sample=sample)
 
+    def _draw_block_sample(self, level: int, prev: Optional[Dict[str, Any]],
+                           match: MatchConfig,
+                           fraction: float) -> Dict[str, Any]:
+        """One level's recorded systematic-PPS block draw (round 0).
+
+        Weights come from the previous level's per-block peak-occupancy
+        telemetry (``prev["block_peaks"]``, block-id indexed, re-ordered by
+        the schedule) with the degree stat as the k = 2 fallback, floored
+        at 1 so zero-yield blocks keep nonzero inclusion probability (the
+        HT estimator needs π > 0 everywhere it might observe mass).  The
+        full schedule-ordered weight vector is recorded as ``"w"`` — the
+        adaptive rounds (`sampled.evaluate_level_sampled`) redraw from it
+        via conditional PPS, so a recorded plan is self-contained.
+        """
+        from . import sampled as sampled_lib
+
+        cfg = self.cfg
+        m = self.n_blocks
+        key = sampled_lib.sample_key(cfg.sample_seed, level)
+        n_sample = min(m, max(1, math.ceil(fraction * m)))
         peaks = None if prev is None else prev.get("block_peaks")
         if peaks is not None and len(peaks) == m:
             # block-id indexed telemetry → schedule order
@@ -562,19 +795,16 @@ class ExecutionPlanner:
             w = block_degree_stat(
                 self.g, match.root_block).astype(np.float64)[self.block_order]
             weights_src = "degree"
-        # floor at 1 so zero-yield blocks keep nonzero inclusion probability
-        # (the HT estimator needs pi > 0 everywhere it might observe mass)
         w = np.maximum(w, 1.0)
         u = sampled_lib.sample_uniform(key)
         positions, pis = sampled_lib.systematic_sample(w, n_sample, u)
-
-        sample = {
-            "fraction": float(cfg.sample_fraction),
+        return {
+            "fraction": float(fraction),
             "n_sample": int(positions.shape[0]),
+            "n_requested": int(n_sample),
             "positions": [int(x) for x in positions],
             "pis": [float(x) for x in pis],
             "key": key,
             "weights": weights_src,
+            "w": [float(x) for x in w],
         }
-        return LevelPlan(plane="sampled", match=match, max_batch=max_batch,
-                         sample=sample)

@@ -57,7 +57,8 @@ from .plan import make_plan
 
 __all__ = [
     "evaluate_level_sampled", "ht_estimate", "ht_interval",
-    "normal_quantile", "sample_key", "sample_uniform", "systematic_sample",
+    "inclusion_probs", "normal_quantile", "sample_key", "sample_uniform",
+    "systematic_sample",
 ]
 
 # near-certain inclusion: treat π within fp-noise of 1 as a certainty unit
@@ -109,12 +110,17 @@ def sample_key(seed: int, level: int) -> List[int]:
     return [int(seed), int(level)]
 
 
-def sample_uniform(key: Sequence[int]) -> float:
-    """One uniform in [0, 1) from a counter-based (Philox) key.
+def sample_uniform(key: Sequence[int], count: int = 1) -> float:
+    """The ``count``-th uniform in [0, 1) from a counter-based (Philox) key.
 
     Counter-based so the draw depends only on the key words — identical
-    across platforms, processes, and resumes.
+    across platforms, processes, and resumes.  ``count`` indexes into the
+    key's stream (1 = the first value, the default): adaptive round ``r``
+    consumes the ``(r+1)``-th value, so every round's uniform is a pure
+    function of (key, round) and replays verbatim.
     """
+    if count < 1:
+        raise ValueError("count must be >= 1")
     words = [int(k) & 0xFFFFFFFFFFFFFFFF for k in key]
     # Philox takes exactly two 64-bit key words; fold the domain tag
     # ("SP", sample plane) into the first so other users of the same seed
@@ -122,7 +128,7 @@ def sample_uniform(key: Sequence[int]) -> float:
     words[0] ^= 0x5350 << 40
     gen = np.random.Generator(
         np.random.Philox(key=np.asarray(words[:2], np.uint64)))
-    return float(gen.random())
+    return float(gen.random(count)[-1])
 
 
 def systematic_sample(weights: np.ndarray, n_sample: int,
@@ -175,6 +181,50 @@ def systematic_sample(weights: np.ndarray, n_sample: int,
         selected[rest_idx[picks]] = True
     positions = np.flatnonzero(selected).astype(np.int64)
     return positions, pis[positions]
+
+
+def inclusion_probs(weights: np.ndarray, n_sample: int) -> np.ndarray:
+    """Full inclusion-probability vector of `systematic_sample`'s design.
+
+    Systematic PPS inclusion probabilities are a pure function of
+    (weights, n_sample) — the uniform only picks *which* units land in the
+    sample, not how likely each was.  Mirrors `systematic_sample`'s
+    certainty-extraction loop exactly, so
+    ``inclusion_probs(w, s)[positions] == pis`` for any draw.  The
+    adaptive sampler needs the probabilities of the *undrawn* units too:
+    conditional PPS composes round-r draw probabilities onto the
+    cumulative inclusion probability of every still-undrawn unit.
+    """
+    w = np.asarray(weights, np.float64)
+    if np.any(w < 0) or not np.all(np.isfinite(w)):
+        raise ValueError("weights must be finite and non-negative")
+    m = int(w.shape[0])
+    s = int(min(n_sample, m))
+    if s <= 0:
+        return np.zeros(m, np.float64)
+    if s >= m:
+        return np.ones(m, np.float64)
+    w = np.maximum(w, 1e-12)
+
+    certain = np.zeros(m, bool)
+    while True:
+        s_r = s - int(certain.sum())
+        if s_r <= 0:
+            break
+        rest = ~certain
+        p = s_r * w / max(w[rest].sum(), 1e-300)
+        newly = rest & (p >= 1.0)
+        if not newly.any():
+            break
+        certain |= newly
+
+    pis = np.zeros(m, np.float64)
+    pis[certain] = 1.0
+    rest_idx = np.flatnonzero(~certain)
+    s_r = s - int(certain.sum())
+    if s_r > 0:
+        pis[rest_idx] = s_r * w[rest_idx] / w[rest_idx].sum()
+    return pis
 
 
 def ht_estimate(ys: np.ndarray, pis: np.ndarray) -> float:
@@ -256,30 +306,62 @@ def sample_group(
     n: int,
     sampled_ids: np.ndarray,
     deadline: Optional[float] = None,
+    schedule_positions: Optional[np.ndarray] = None,
+    record_embeddings: bool = False,
 ):
     """Complete-mode `_mine_group` over the sampled blocks only.
 
-    Returns (ys, outs, dispatches, block_peaks, timed_out) where ``ys`` is
-    the (P₀, s) matrix of per-sampled-block support increments — the HT
-    estimator's input.  Increments are non-negative for every batchable
-    metric (mis/mis_luby counters, MNI minima and fractional mass are all
-    monotone non-decreasing in blocks processed).
+    Returns (ys, outs, dispatches, block_peaks, timed_out, replay) where
+    ``ys`` is the (P₀, s) matrix of per-sampled-block support increments —
+    the HT estimator's input.  Increments are non-negative for every
+    batchable metric (mis/mis_luby counters, MNI minima and fractional
+    mass are all monotone non-decreasing in blocks processed).
+
+    With ``record_embeddings=True`` the steps run in capture mode and
+    ``replay`` holds, per pattern, {schedule position (str) →
+    {"emb" (the block's raw `match_block` rows), "found", "ovf", "peak"}}
+    — JSON-native, rides in the `SampledCursor`, and lets exact escalation
+    *replay* these blocks instead of re-matching them
+    (``schedule_positions`` maps the subset loop index back to the level
+    schedule).
     """
     hist: List[np.ndarray] = []
 
     def on_block(gs):
         hist.append(np.asarray(gs.supports, np.int64).copy())
 
-    outs, timed_out, dispatches, bpeaks = _mine_group(
+    emb_sink = None
+    replay: Optional[List[Dict[str, Any]]] = None
+    if record_embeddings:
+        assert schedule_positions is not None
+        spos = np.asarray(schedule_positions, np.int64)
+        replay = [dict() for _ in plans]
+
+        def emb_sink(b, emb, nv, found, ovf, peak, bucket_map):
+            pos = str(int(spos[b]))
+            for row in range(int(bucket_map.size)):
+                gi = int(bucket_map[row])
+                if gi < 0:
+                    continue
+                c = int(nv[row])
+                replay[gi][pos] = {
+                    "emb": emb[row, :c].tolist(),
+                    "found": int(found[row]),
+                    "ovf": bool(ovf[row]),
+                    "peak": int(peak[row]),
+                }
+
+    outs, timed_out, dispatches, bpeaks, _ = _mine_group(
         dev_g, plans, list(group_taus), metric, cfg, complete=True, n=n,
-        deadline=deadline, on_block=on_block, block_order=sampled_ids)
+        deadline=deadline, on_block=on_block, block_order=sampled_ids,
+        emb_sink=emb_sink)
     if timed_out:
-        return None, outs, dispatches, bpeaks, True
+        return None, outs, dispatches, bpeaks, True, None
     finals = np.asarray([o.support for o in outs], np.int64)
     cum = (np.stack(hist + [finals], axis=1) if hist
            else finals[:, None])                       # (P₀, s) cumulative
     ys = np.diff(cum, axis=1, prepend=0)               # per-block increments
-    return ys, outs, dispatches, bpeaks, False
+    return ys, outs, dispatches, bpeaks, False, replay
 
 
 # ---------------------------------------------------------------------------
@@ -313,10 +395,15 @@ class _EscalationHooks:
     def on_group_state(self, k: int, lo: int, state) -> None:
         self._h.on_group_state(k, lo, state)
 
+    def resume_replans(self) -> int:
+        fn = getattr(self._h, "resume_replans", None)
+        return fn() if fn is not None else 0
+
     def on_group_done(self, k, lo, idxs, outcomes, dispatches,
-                      block_peaks=None) -> None:
+                      block_peaks=None, replans=0) -> None:
         self._h.on_group_done(k, lo, [self._to_level[i] for i in idxs],
-                              outcomes, dispatches, block_peaks=block_peaks)
+                              outcomes, dispatches, block_peaks=block_peaks,
+                              replans=replans)
 
 
 # ---------------------------------------------------------------------------
@@ -367,13 +454,37 @@ def evaluate_level_sampled(
     max_batch: int = DEFAULT_MAX_BATCH,
     hooks=None,
     block_order: Optional[np.ndarray] = None,
+    sample_rounds: int = 1,
+    counters: Optional[Dict[str, int]] = None,
 ) -> Tuple[List[Optional[PatternOutcome]], bool, LevelTelemetry]:
     """Evaluate a candidate level with the sampled plane (module docstring).
 
     ``sample`` is the planner's recorded draw (`LevelPlan.sample`):
-    ``{"positions", "pis", "key", ...}`` with positions indexing the
+    ``{"positions", "pis", "key", "w", ...}`` with positions indexing the
     schedule ``block_order``.  ``None`` — or full coverage, or
     ``complete=True`` — degenerates to the exact batched plane.
+
+    **Adaptive rounds** (``sample_rounds`` > 1): after classifying the
+    plan's round-0 draw, still-undecided patterns get further geometric
+    rounds — each doubles coverage by drawing ``min(|undrawn|, |drawn|)``
+    new blocks from the complement via conditional PPS.  A drawn unit's
+    estimator π is *frozen* at its cumulative inclusion probability at
+    draw time (round r composes ``π' = π + (1−π)·q_r`` onto every
+    complement unit); freezing understates the true multi-round inclusion,
+    so the HT total only over-estimates — escalating more, never pruning a
+    frequent pattern.  Rounds stop when the undecided set stops shrinking,
+    empties, coverage completes, or ``sample_rounds`` is reached.  Round
+    draws are pure functions of (key, round, weights, drawn-set) and each
+    round is recorded in the phase cursor, so killed sessions resume
+    mid-round bit-identically.
+
+    **Escalation reuse** (``escalate=True``): the sample pass runs in
+    capture mode, recording each (pattern, block) raw match result; the
+    exact escalation then walks the full schedule but *replays* sampled
+    positions with the cheap update-only step instead of re-matching them
+    (`evaluate_level_batched`'s ``replay``).  ``counters`` threads through
+    to the escalation pass only — ``{"match_blocks", "replay_blocks"}``
+    counts prove no sampled block is ever re-matched.
 
     ``hooks`` extends the batched resume surface with the sampled-phase
     cursor: ``resume_sampled()`` → the recorded phase dict or None, and
@@ -406,16 +517,19 @@ def evaluate_level_sampled(
             deadline=deadline, max_batch=max_batch, hooks=hooks,
             block_order=block_order)
         tel.sampled = {
-            "fraction": 1.0, "n_sample": m, "n_blocks": m, "escalated": 0,
-            "pruned": 0, "exact": True, "confidence": float(confidence),
-            "ci_width_mean": 0.0,
+            "fraction": 1.0, "n_sample": m, "n_blocks": m, "rounds": 0,
+            "escalated": 0, "pruned": 0, "exact": True,
+            "confidence": float(confidence), "ci_width_mean": 0.0,
         }
         return outcomes, timed_out, tel
 
-    sampled_ids = block_order[positions]
+    P = len(patterns)
+    w = np.maximum(np.asarray(sample.get("w", np.ones(m)), np.float64),
+                   1e-12)
+    key = list(sample.get("key", []))
     telemetry = LevelTelemetry()
     peaks = np.zeros(total_blocks, np.int64)
-    outcomes: List[Optional[PatternOutcome]] = [None] * len(patterns)
+    outcomes: List[Optional[PatternOutcome]] = [None] * P
 
     rec = None
     if hooks is not None:
@@ -423,6 +537,8 @@ def evaluate_level_sampled(
         rec = fn() if fn is not None else None
     sgroups: Dict[str, Dict[str, Any]] = dict(rec["groups"]) if rec else {}
     classify: Optional[Dict[str, Any]] = rec.get("classify") if rec else None
+    rec_rounds: List[Dict[str, Any]] = list((rec or {}).get("rounds") or [])
+    rounds: List[Dict[str, Any]] = []
 
     def record(phase: str) -> None:
         if hooks is None:
@@ -430,85 +546,201 @@ def evaluate_level_sampled(
         fn = getattr(hooks, "on_sampled", None)
         if fn is not None:
             fn({"phase": phase, "positions": [int(p) for p in positions],
-                "key": list((sample or {}).get("key", [])),
-                "groups": sgroups, "classify": classify})
+                "key": key, "rounds": rounds, "groups": sgroups,
+                "classify": classify})
 
-    # -- phase 1: sample pass ----------------------------------------------
-    groups = list(level_groups(patterns, max_batch))
+    # cumulative inclusion state after the plan's round-0 draw.  The
+    # frozen per-unit π of round 0 are the plan's exact `pis`;
+    # `inclusion_probs` gives the matching full-schedule vector (the
+    # requested draw size, not the post-clip count, parameterises the
+    # design — `n_requested`).
+    drawn = np.zeros(m, bool)
+    drawn[positions] = True
+    pi_cum = inclusion_probs(w, int(sample.get("n_requested", s)))
+
+    ys_acc: Dict[int, List[float]] = {i: [] for i in range(P)}
+    pis_acc: Dict[int, List[float]] = {i: [] for i in range(P)}
+    outs_acc: Dict[int, Dict[str, Any]] = {}
+    replay_tab: Dict[int, Dict[int, Any]] = {i: {} for i in range(P)}
+    width_of: Dict[int, float] = {}
+    pruned: Dict[str, Dict[str, Any]] = {}
+    undecided: List[int] = list(range(P))
+    max_rounds = max(1, int(sample_rounds))
+    n_rounds_run = 0
     timed_out = False
-    for k, lo, idxs in groups:
+
+    # -- phases 1+2: sample rounds + classification -------------------------
+    if classify is not None:
+        # resumed past classification: rebuild the drawn set and the
+        # escalation replay table from the recorded rounds/groups
+        rounds = rec_rounds
+        n_rounds_run = int(classify.get("rounds", 1 + len(rec_rounds)))
+        for rr in rec_rounds:
+            drawn[np.asarray(rr["positions"], np.int64)] = True
+        for g in sgroups.values():
+            rep = g.get("replay")
+            if rep is not None:
+                for j, i in enumerate(g["idxs"]):
+                    replay_tab[int(i)].update(
+                        {int(p): v for p, v in rep[j].items()})
+    else:
+        r = 0
+        while True:
+            # this round's draw: plan (r = 0), recorded (resume), or live
+            if r == 0:
+                r_pos, r_pis = positions, pis
+            elif r <= len(rec_rounds):
+                rr = rec_rounds[r - 1]
+                comp = np.flatnonzero(~drawn)
+                r_pos = np.asarray(rr["positions"], np.int64)
+                r_pis = np.asarray(rr["pis"], np.float64)
+                pi_cum[comp] += (1.0 - pi_cum[comp]) \
+                    * inclusion_probs(w[comp], int(rr["n_new"]))
+                drawn[r_pos] = True
+                rounds.append(dict(rr))
+            else:
+                comp = np.flatnonzero(~drawn)
+                n_new = int(min(comp.size, drawn.sum()))
+                if n_new <= 0:
+                    break
+                u_r = sample_uniform(key, count=r + 1)
+                pos_local, pis_local = systematic_sample(w[comp], n_new, u_r)
+                r_pos = comp[pos_local]
+                # freeze the estimator π at draw time: composed cumulative
+                # inclusion, conditional on not being drawn earlier
+                r_pis = pi_cum[r_pos] + (1.0 - pi_cum[r_pos]) * pis_local
+                pi_cum[comp] += (1.0 - pi_cum[comp]) \
+                    * inclusion_probs(w[comp], n_new)
+                drawn[r_pos] = True
+                rounds.append({
+                    "round": int(r), "n_new": int(n_new),
+                    "positions": [int(x) for x in r_pos],
+                    "pis": [float(x) for x in r_pis],
+                })
+
+            # run the round over the still-undecided patterns
+            und = sorted(undecided)
+            sub_groups = list(level_groups([patterns[i] for i in und],
+                                           max_batch))
+            sampled_ids_r = block_order[r_pos]
+            for k, lo, jdxs in sub_groups:
+                idxs = [und[j] for j in jdxs]
+                gk = f"{k}:{lo}:r{r}"
+                if gk in sgroups:
+                    continue
+                if deadline is not None and time.monotonic() > deadline:
+                    timed_out = True
+                    break
+                plans = [make_plan(patterns[i], host_g) for i in idxs]
+                ys, outs, disp, bpeaks, g_timed, rep = sample_group(
+                    dev_g, plans, [taus[i] for i in idxs], metric, cfg, n=n,
+                    sampled_ids=sampled_ids_r, deadline=deadline,
+                    schedule_positions=r_pos, record_embeddings=escalate)
+                if g_timed:
+                    timed_out = True
+                    break
+                sgroups[gk] = {
+                    "idxs": [int(i) for i in idxs],
+                    "ys": ys.tolist(),
+                    "outs": [_outcome_dict(o) for o in outs],
+                    "dispatches": int(disp),
+                    "block_peaks": [int(x) for x in bpeaks],
+                    **({"replay": rep} if rep is not None else {}),
+                }
+                record("sample")
+            if timed_out:
+                break
+
+            # merge the round into the per-pattern accumulators
+            for k, lo, jdxs in sub_groups:
+                g = sgroups[f"{k}:{lo}:r{r}"]
+                ys_g = np.asarray(g["ys"], np.float64)
+                rep = g.get("replay")
+                for j, i in enumerate(g["idxs"]):
+                    i = int(i)
+                    ys_acc[i].extend(float(x) for x in ys_g[j])
+                    pis_acc[i].extend(float(x) for x in r_pis)
+                    od = dict(g["outs"][j])
+                    prev_od = outs_acc.get(i)
+                    if prev_od is not None:
+                        od["embeddings_found"] += prev_od["embeddings_found"]
+                        od["overflowed"] = (od["overflowed"]
+                                            or prev_od["overflowed"])
+                        od["max_count"] = max(od["max_count"],
+                                              prev_od["max_count"])
+                    outs_acc[i] = od
+                    if rep is not None:
+                        replay_tab[i].update(
+                            {int(p): v for p, v in rep[j].items()})
+
+            # classify: prune what the cumulative interval settles
+            newly_pruned = 0
+            still: List[int] = []
+            for i in und:
+                ys_i = np.asarray(ys_acc[i], np.float64)
+                pis_i = np.asarray(pis_acc[i], np.float64)
+                est, lo_ci, hi_ci = ht_interval(ys_i, pis_i, m, confidence)
+                out = PatternOutcome(**outs_acc[i])
+                s_i = int(ys_i.shape[0])
+                if not escalate:
+                    pruned[str(i)] = _outcome_dict(_estimated_outcome(
+                        est, taus[i], out, s_i, pruned=False))
+                elif hi_ci < taus[i]:
+                    pruned[str(i)] = _outcome_dict(_estimated_outcome(
+                        est, taus[i], out, s_i, pruned=True))
+                else:
+                    still.append(i)
+                    continue
+                if math.isfinite(hi_ci - lo_ci):
+                    width_of[i] = float(hi_ci - lo_ci)
+                newly_pruned += 1
+            undecided = still
+            n_rounds_run = r + 1
+            if (not undecided or not escalate or newly_pruned == 0
+                    or bool(drawn.all()) or n_rounds_run >= max_rounds):
+                break
+            r += 1
+
+        if not timed_out:
+            classify = {
+                "escalate": [int(i) for i in undecided], "pruned": pruned,
+                "rounds": int(n_rounds_run),
+                # satellite fix: the settled-set mean is None — not NaN,
+                # not 0.0 — when every pattern escalated
+                "ci_width_mean": (float(np.mean(list(width_of.values())))
+                                  if width_of else None),
+            }
+            record("escalate")
+
+    telemetry.dispatches += sum(g["dispatches"] for g in sgroups.values())
+    for gk, g in sgroups.items():
+        peaks = np.maximum(peaks, np.asarray(g["block_peaks"], np.int64))
         telemetry.state_bytes = max(
             telemetry.state_bytes,
-            _bucket_size(len(idxs))
-            * (_state_bytes(metric, k, n) + transient_match_bytes(cfg, k)))
-        gk = f"{k}:{lo}"
-        if gk in sgroups:
-            continue
-        if deadline is not None and time.monotonic() > deadline:
-            timed_out = True
-            break
-        plans = [make_plan(patterns[i], host_g) for i in idxs]
-        ys, outs, disp, bpeaks, g_timed = sample_group(
-            dev_g, plans, [taus[i] for i in idxs], metric, cfg, n=n,
-            sampled_ids=sampled_ids, deadline=deadline)
-        if g_timed:
-            timed_out = True
-            break
-        sgroups[gk] = {
-            "idxs": [int(i) for i in idxs],
-            "ys": ys.tolist(),
-            "outs": [_outcome_dict(o) for o in outs],
-            "dispatches": int(disp),
-            "block_peaks": [int(x) for x in bpeaks],
-        }
-        record("sample")
-    sample_dispatches = sum(g["dispatches"] for g in sgroups.values())
-    telemetry.dispatches += sample_dispatches
-    for g in sgroups.values():
-        peaks = np.maximum(peaks, np.asarray(g["block_peaks"], np.int64))
+            _bucket_size(len(g["idxs"]))
+            * (_state_bytes(metric, int(gk.split(":")[0]), n)
+               + transient_match_bytes(cfg, int(gk.split(":")[0]))))
     if timed_out:
         telemetry.block_peaks = peaks
         return outcomes, True, telemetry
 
-    # -- phase 2: classify --------------------------------------------------
-    if classify is None:
-        esc: List[int] = []
-        pruned: Dict[str, Dict[str, Any]] = {}
-        widths: List[float] = []
-        for k, lo, idxs in groups:
-            g = sgroups[f"{k}:{lo}"]
-            ys_g = np.asarray(g["ys"], np.float64)
-            for j, i in enumerate(idxs):
-                est, lo_ci, hi_ci = ht_interval(ys_g[j], pis, m, confidence)
-                if math.isfinite(hi_ci - lo_ci):
-                    widths.append(hi_ci - lo_ci)
-                out = PatternOutcome(**g["outs"][j])
-                if not escalate:
-                    pruned[str(i)] = _outcome_dict(_estimated_outcome(
-                        est, taus[i], out, s, pruned=False))
-                elif hi_ci < taus[i]:
-                    pruned[str(i)] = _outcome_dict(_estimated_outcome(
-                        est, taus[i], out, s, pruned=True))
-                else:
-                    esc.append(int(i))
-        classify = {
-            "escalate": esc, "pruned": pruned,
-            "ci_width_mean": (float(np.mean(widths)) if widths else 0.0),
-        }
-        record("escalate")
     esc_idx = [int(i) for i in classify["escalate"]]
     for i_str, od in classify["pruned"].items():
         outcomes[int(i_str)] = PatternOutcome(**od)
 
-    # -- phase 3: exact escalation -----------------------------------------
+    # -- phase 3: exact escalation (replaying every sampled block) ----------
     if esc_idx:
         adapter = _EscalationHooks(hooks, esc_idx) if hooks is not None \
             else None
+        replay_list = None
+        if all(replay_tab.get(i) for i in esc_idx):
+            replay_list = [{int(p): v for p, v in replay_tab[i].items()}
+                           for i in esc_idx]
         outs2, esc_timed, tel2 = evaluate_level_batched(
             host_g, dev_g, [patterns[i] for i in esc_idx],
             [taus[i] for i in esc_idx], metric, cfg, complete=complete,
             deadline=deadline, max_batch=max_batch, hooks=adapter,
-            block_order=block_order)
+            block_order=block_order, replay=replay_list, counters=counters)
         timed_out |= esc_timed
         for i, o in zip(esc_idx, outs2):
             outcomes[i] = o
@@ -522,11 +754,14 @@ def evaluate_level_sampled(
         if o is not None:
             telemetry.max_count = max(telemetry.max_count, o.max_count)
             telemetry.overflowed |= o.overflowed
+    drawn_total = int(drawn.sum())
+    cwm = classify["ci_width_mean"]
     telemetry.sampled = {
-        "fraction": s / m, "n_sample": s, "n_blocks": m,
+        "fraction": drawn_total / m, "n_sample": drawn_total, "n_blocks": m,
+        "rounds": int(classify.get("rounds", n_rounds_run)),
         "escalated": len(esc_idx), "pruned": len(classify["pruned"]),
         "exact": False, "confidence": float(confidence),
-        "ci_width_mean": float(classify["ci_width_mean"]),
+        "ci_width_mean": None if cwm is None else float(cwm),
     }
     assert timed_out or all(o is not None for o in outcomes)
     return outcomes, timed_out, telemetry

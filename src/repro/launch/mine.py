@@ -66,6 +66,12 @@ def main(argv=None) -> int:
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="sampled plane: RNG key root of the per-level "
                          "block draws (part of the session fingerprint)")
+    ap.add_argument("--sample-rounds", type=int, default=3,
+                    help="sampled plane: max adaptive draw rounds per "
+                         "level — each round doubles block coverage for "
+                         "the still-undecided patterns until the "
+                         "undecided set stops shrinking (1 = the single "
+                         "--sample-fraction draw)")
     ap.add_argument("--root-order", default="degree",
                     choices=["degree", "vertex"],
                     help="root-block schedule: highest max-out-degree "
@@ -148,7 +154,7 @@ def main(argv=None) -> int:
         time_limit_s=args.time_limit, execution=args.execution,
         root_order=args.root_order,
         sample_fraction=args.sample_fraction, confidence=args.confidence,
-        sample_seed=args.sample_seed,
+        sample_seed=args.sample_seed, sample_rounds=args.sample_rounds,
         match=_dc.replace(
             MatchConfig.for_graph(g, cap=args.cap, expansion=args.expansion),
             pallas_interpret=interpret,
@@ -213,6 +219,24 @@ def main(argv=None) -> int:
               f"labels={pat.labels.tolist()} edges={pat.edges()}")
     if len(res.frequent) > 10:
         print(f"[mine]   … and {len(res.frequent) - 10} more")
+
+    # warm-start future pricing: fold the measured escalation fraction of
+    # this run's sampled levels into the calibration file (schema 3) —
+    # the planner's `esc_prior()` reads it back instead of the built-in
+    # ESCALATION_PRIOR constant
+    samp = [v["sampled"] for v in res.per_level.values()
+            if isinstance(v.get("sampled"), dict)
+            and not v["sampled"].get("exact", False)]
+    decided = sum(int(d.get("escalated", 0)) + int(d.get("pruned", 0))
+                  for d in samp)
+    if decided > 0 and not res.timed_out:
+        from repro.core.planner import persist_escalation_fraction
+
+        measured = sum(int(d.get("escalated", 0)) for d in samp) / decided
+        where = persist_escalation_fraction(measured, path=args.calibration)
+        if where:
+            print(f"[mine] calibration: measured escalation fraction "
+                  f"{measured:.3f} folded into {where}")
 
     if args.json:
         out = {

@@ -119,6 +119,10 @@ class _LevelRecorder:
                 peaks = [max(a, b) for a, b in zip(peaks, arr)]
         return peaks
 
+    def resume_replans(self) -> int:
+        """Total within-level cap replans of the completed groups."""
+        return sum(gd.replans for gd in self.groups_done)
+
     def resume_sampled(self) -> Optional[dict]:
         """The sampled-phase cursor recorded for this level, or None."""
         return (self._resume.sampled.to_dict()
@@ -145,12 +149,14 @@ class _LevelRecorder:
         self._session._on_state_update()
 
     def on_group_done(self, k: int, lo: int, idxs, outcomes,
-                      dispatches: int, block_peaks=None) -> None:
+                      dispatches: int, block_peaks=None,
+                      replans: int = 0) -> None:
         self.groups_done.append(GroupDone(
             k=k, lo=lo, idxs=list(idxs), outcomes=list(outcomes),
             dispatches=dispatches,
             block_peaks=(None if block_peaks is None
-                         else [int(x) for x in block_peaks])))
+                         else [int(x) for x in block_peaks]),
+            replans=int(replans)))
         self.inflight_key = None
         self.inflight_group = None
         self.inflight_super = None

@@ -153,6 +153,8 @@ class GroupDone:
     # (length = total root blocks) — the sampled plane's next-level draw
     # weights; None for snapshots written before the sampled plane existed
     block_peaks: Optional[List[int]] = None
+    # within-level cap replans this group performed (auto plane only)
+    replans: int = 0
 
 
 @dataclasses.dataclass
@@ -168,21 +170,26 @@ class SampledCursor:
     """
 
     phase: str                          # "sample" | "escalate"
-    positions: List[int]                # sampled schedule indices (asc)
+    positions: List[int]                # round-0 schedule indices (asc)
     key: List[int]                      # RNG key words of the draw
-    # completed sample-pass groups, keyed "k:lo" →
+    # completed sample-pass groups, keyed "k:lo:r<round>" →
     # {"idxs", "ys" (per-pattern per-block increments), "outcomes",
-    #  "dispatches", "block_peaks"}
+    #  "dispatches", "block_peaks", "replay" (escalation-reuse records)}
     groups: Dict[str, dict]
     # phase == "escalate" only: {"escalate" (eval-set indices),
-    # "pruned" (str(idx) → outcome dict), "ci_width_mean"}
+    # "pruned" (str(idx) → outcome dict), "rounds", "ci_width_mean"}
     classify: Optional[dict] = None
+    # adaptive rounds past the plan's round 0, in order:
+    # {"round", "n_new", "positions", "pis"} — replayed verbatim so a
+    # resume never re-draws a committed round
+    rounds: List[dict] = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "phase": self.phase,
             "positions": [int(x) for x in self.positions],
             "key": [int(x) for x in self.key],
+            "rounds": self.rounds,
             "groups": self.groups,
             "classify": self.classify,
         }
@@ -193,6 +200,7 @@ class SampledCursor:
             phase=str(d["phase"]),
             positions=[int(x) for x in d["positions"]],
             key=[int(x) for x in d["key"]],
+            rounds=list(d.get("rounds") or []),
             groups=dict(d.get("groups") or {}),
             classify=d.get("classify"),
         )
@@ -273,6 +281,7 @@ def encode_session(state: SessionState, metric: str,
                 "dispatches": gd.dispatches,
                 "block_peaks": (None if gd.block_peaks is None
                                 else [int(x) for x in gd.block_peaks]),
+                "replans": int(gd.replans),
             }
             for gd in cur.groups_done
         ],
@@ -301,6 +310,8 @@ def encode_session(state: SessionState, metric: str,
             "max_count": gs_max.tolist(),
             "block_peaks": (None if gs.block_peaks is None
                             else np.asarray(gs.block_peaks).tolist()),
+            "cap": (None if gs.cap is None else int(gs.cap)),
+            "replans": int(gs.replans),
         }
         extra["cursor"]["group"] = list(cur.inflight_key)
         extra["cursor"]["block"] = int(gs.next_block)
@@ -351,6 +362,7 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
                 outcomes=[_decode_outcome(o) for o in gd["outcomes"]],
                 dispatches=gd["dispatches"],
                 block_peaks=gd.get("block_peaks"),
+                replans=int(gd.get("replans", 0)),
             )
             for gd in c["groups_done"]
         ],
@@ -380,6 +392,8 @@ def decode_session(leaves: List[np.ndarray], extra: Dict[str, Any],
                              [0] * len(inflight["supports"])), np.int64),
             block_peaks=(None if inflight.get("block_peaks") is None
                          else np.asarray(inflight["block_peaks"], np.int64)),
+            cap=inflight.get("cap"),
+            replans=int(inflight.get("replans", 0)),
         )
     elif inflight is not None and inflight["plane"] == "distributed":
         cursor.inflight_super = SuperBlockState(

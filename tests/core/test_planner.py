@@ -42,7 +42,9 @@ def _cfg(g, execution, metric="mis", **kw):
 def _norm(res):
     """Everything plane-invariant: stats, frequent set, per-level counts
     minus wall clock, dispatch counts (amortized differently per plane)
-    and the auto-only plan record."""
+    and the auto-only records (plan/pricing, sampled telemetry, occupancy
+    weights and within-level replan counts — diagnostics of *how* a plane
+    ran, not *what* it found)."""
     return dict(
         stats=[(s.pattern.key(), s.support, s.tau, s.frequent,
                 s.embeddings_found, s.overflowed, s.blocks_run, s.max_count)
@@ -51,7 +53,8 @@ def _norm(res):
         searched=res.searched,
         per_level={
             lvl: {k: v for k, v in st.items()
-                  if k not in ("wall_s", "dispatches", "plan")}
+                  if k not in ("wall_s", "dispatches", "plan", "sampled",
+                               "block_peaks", "replans")}
             for lvl, st in res.per_level.items()},
         timed_out=res.timed_out,
     )

@@ -230,7 +230,7 @@ def _population(metric="mis"):
     dev_g = DeviceGraph.from_host(g)
     taus = [tau_threshold(6, 0.4, p.k) for p in pats]
     n_blocks = -(-g.n // cfg.root_block)
-    ys, outs, _, _, timed = sample_group(
+    ys, outs, _, _, timed, _ = sample_group(
         dev_g, [make_plan(p, g) for p in pats], taus, metric, cfg, n=g.n,
         sampled_ids=np.arange(n_blocks, dtype=np.int64))
     assert not timed
@@ -342,14 +342,77 @@ def test_plan_sampled_degenerates_to_batched():
     assert all(p == 1.0 for p in plan.sample["pis"])
 
 
-def test_auto_never_picks_sampled():
+def test_auto_prices_sampled_by_tau_and_escalation():
+    """The auto planner prices the sampled plane per level (ISSUE 10):
+    below the hidden-mass bound it must stay exact (a zero-support pattern
+    cannot be pruned there), above it the predicted escalation mass decides
+    — and the whole decision, inputs included, rides in the plan."""
     g = _graph()
     from repro.core.flexis import initial_candidates
+    from repro.core.planner import hidden_mass_bound
     pats = initial_candidates(g)
-    plan = _planner(g, _cfg("mis", "auto")).plan_level(
-        1, pats, [3] * len(pats))
+
+    # τ = 3 sits below the hidden-mass bound at f = 0.25 → batched, with
+    # the pricing record explaining why
+    pl = _planner(g, _cfg("mis", "auto"))
+    plan = pl.plan_level(1, pats, [3] * len(pats))
     assert plan.plane in ("sequential", "batched", "distributed")
     assert plan.sample is None
+    if plan.pricing is not None:
+        assert plan.pricing["chosen"] == "batched"
+        assert plan.pricing["tau_min"] <= plan.pricing["hidden_bound"]
+
+    # τ far above the bound + telemetry showing everything pruned →
+    # sampled wins, decision + draw recorded and JSON-replayable
+    hidden = hidden_mass_bound(0.95, 0.25)
+    tau = int(hidden) + 5
+    prev = {"sampled": {"exact": False, "escalated": 0, "pruned": 20},
+            "searched": 20, "frequent": 0}
+    plan2 = _planner(g, _cfg("mis", "auto")).plan_level(
+        2, pats, [tau] * len(pats), prev=prev)
+    assert plan2.plane == "sampled" and plan2.sample is not None
+    assert plan2.pricing["chosen"] == "sampled"
+    assert plan2.pricing["esc_source"] == "telemetry"
+    assert plan2.pricing["esc"] == 0.0
+    assert plan2.pricing["sampled_s"] < plan2.pricing["batched_s"]
+    d = json.loads(json.dumps(plan2.to_dict()))
+    back = LevelPlan.from_dict(d, _match_cfg())
+    assert back.pricing == plan2.pricing and back.sample == plan2.sample
+
+    # ... but a prior of certain escalation makes sampling pointless even
+    # at a huge τ (f·b + 1.0·((1−f)·b + replay) ≥ margin·b)
+    prev_bad = {"sampled": {"exact": False, "escalated": 20, "pruned": 0},
+                "searched": 20, "frequent": 20}
+    plan3 = _planner(g, _cfg("mis", "auto")).plan_level(
+        2, pats, [tau] * len(pats), prev=prev_bad)
+    assert plan3.plane != "sampled"
+    assert plan3.pricing is None or plan3.pricing["chosen"] == "batched"
+
+
+def test_predict_escalation_chain():
+    """telemetry → frontier → prior, most-informed first."""
+    g = _graph()
+    pl = _planner(g, _cfg("mis", "auto"))
+    # no prev at all → the calibration prior
+    from repro.core.planner import ESCALATION_PRIOR
+    esc, src = pl._predict_escalation(None)
+    assert (esc, src) == (ESCALATION_PRIOR, "prior")
+    # sampled telemetry wins
+    esc, src = pl._predict_escalation(
+        {"sampled": {"exact": False, "escalated": 3, "pruned": 9},
+         "searched": 12, "frequent": 12})
+    assert src == "telemetry" and esc == pytest.approx(0.25)
+    # exact (degenerate) sampled telemetry is no telemetry
+    esc, src = pl._predict_escalation(
+        {"sampled": {"exact": True, "escalated": 0, "pruned": 0},
+         "searched": 10, "frequent": 5})
+    assert src == "frontier"
+    assert esc == pytest.approx(0.5 + ESCALATION_PRIOR * 0.5)
+    # calibrated prior replaces the constant
+    pl2 = ExecutionPlanner(g, _cfg("mis", "auto"),
+                           cost_model=CostModel(escalation_fraction=0.1))
+    esc, src = pl2._predict_escalation(None)
+    assert (esc, src) == (0.1, "prior")
 
 
 def test_block_degree_stat_indexes_block_ids():
@@ -410,3 +473,174 @@ def test_schema2_roundtrip(tmp_path, monkeypatch):
     back = load_calibration()
     assert back == dataclasses.replace(cm, source=str(f))
     assert back.row_time("mis_luby") == 8e-6
+
+
+# ---------------------------------------------------------------------------
+# calibration schema 3 (measured escalation fraction) — ISSUE 10
+# ---------------------------------------------------------------------------
+
+def test_persist_escalation_fraction_ema_and_schema_upgrade(tmp_path):
+    from repro.core.planner import (
+        CALIBRATION_SCHEMA, persist_escalation_fraction,
+    )
+    # fresh file: the raw measurement lands as-is, schema stamped 3
+    p = tmp_path / "cal.json"
+    assert persist_escalation_fraction(0.4, path=str(p)) == str(p)
+    d = json.loads(p.read_text())
+    assert d["schema"] == CALIBRATION_SCHEMA
+    assert d["escalation_fraction"] == pytest.approx(0.4)
+    # second run folds in with EMA weight 0.5
+    persist_escalation_fraction(0.0, path=str(p))
+    assert json.loads(p.read_text())["escalation_fraction"] \
+        == pytest.approx(0.2)
+    # out-of-range measurements clamp before the EMA
+    persist_escalation_fraction(7.5, path=str(p))
+    assert json.loads(p.read_text())["escalation_fraction"] \
+        == pytest.approx(0.6)
+    # schema-1 files upgrade in place, preserving their fitted constants
+    old = tmp_path / "old.json"
+    old.write_text(json.dumps({
+        "schema": 1, "dispatch_overhead_s": 1e-3, "lane_time_s": 1e-9,
+        "row_time_s": 2e-6, "vmap_factor": 1.1}))
+    persist_escalation_fraction(0.3, path=str(old))
+    up = json.loads(old.read_text())
+    assert up["schema"] == CALIBRATION_SCHEMA
+    assert up["row_time_s"] == 2e-6
+    assert up["escalation_fraction"] == pytest.approx(0.3)
+    # and the loaded model's prior is the measured fraction
+    cm = load_calibration(str(old))
+    assert cm.escalation_fraction == pytest.approx(0.3)
+    assert cm.esc_prior() == pytest.approx(0.3)
+
+
+def test_schema12_load_leaves_prior_at_constant(tmp_path, monkeypatch):
+    from repro.core.planner import ESCALATION_PRIOR
+    f = tmp_path / "s2.json"
+    f.write_text(json.dumps({
+        "schema": 2, "dispatch_overhead_s": 1e-3, "lane_time_s": 1e-9,
+        "row_time_s": 2e-6, "vmap_factor": 1.1, "row_time_mni_s": 1e-6}))
+    monkeypatch.setenv(CALIBRATION_ENV, str(f))
+    cm = load_calibration()
+    assert cm.escalation_fraction is None
+    assert cm.esc_prior() == ESCALATION_PRIOR
+
+
+# ---------------------------------------------------------------------------
+# RNG golden values — the draws below are part of the resume format: a
+# numpy upgrade that shifts any of them would silently break replay of
+# recorded sample rounds, so they are pinned to exact floats (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_rng_golden_values():
+    assert sample_key(0, 1) == [0, 1]
+    assert sample_key(3, 2) == [3, 2]
+    k = sample_key(0, 1)
+    assert sample_uniform(k) == 0.70962399485867
+    # count=1 must be bit-identical to the historical single-draw form
+    assert sample_uniform(k, count=1) == sample_uniform(k)
+    # count=r+1 is the round-r uniform: a later round never disturbs an
+    # earlier round's draw (same generator, last of r+1 variates)
+    assert sample_uniform(k, count=2) == 0.9795624859036957
+    assert sample_uniform(sample_key(3, 2), count=3) == 0.6850707717552736
+
+    w = np.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])
+    pos, pis = systematic_sample(w, 3, 0.5)
+    assert pos.tolist() == [3, 5, 7]
+    assert pis.tolist() == [
+        0.3333333333333333, 0.5, 0.6666666666666666]
+    from repro.core.sampled import inclusion_probs
+    assert inclusion_probs(w, 3).tolist() == [
+        0.08333333333333333, 0.16666666666666666, 0.25,
+        0.3333333333333333, 0.4166666666666667, 0.5,
+        0.5833333333333334, 0.6666666666666666]
+    # the full-schedule vector agrees with the draw's own π at every
+    # sampled position — the identity conditional PPS composes on
+    assert inclusion_probs(w, 3)[pos].tolist() == pis.tolist()
+
+
+# ---------------------------------------------------------------------------
+# adaptive rounds + escalation reuse (direct level evaluation) — ISSUE 10
+# ---------------------------------------------------------------------------
+
+def _level_fixture(metric="mis", fraction=0.5):
+    """One real level: graph, device graph, candidate patterns, the
+    planner's recorded draw, and the complete-coverage exact outcomes."""
+    from repro.core.batched import evaluate_level_batched
+    from repro.core.flexis import initial_candidates
+    from repro.core.graph import DeviceGraph
+
+    g = _graph()
+    cfg = _cfg(metric, "sampled", sample_fraction=fraction)
+    pats = initial_candidates(g)
+    plan = _planner(g, cfg).plan_level(1, pats, [3] * len(pats))
+    assert plan.plane == "sampled" and plan.sample is not None
+    dev_g = DeviceGraph.from_host(g)
+    exact, timed, _ = evaluate_level_batched(
+        g, dev_g, pats, [1] * len(pats), metric, cfg.match, complete=True)
+    assert not timed
+    return g, dev_g, cfg, pats, plan, exact
+
+
+def test_escalation_reuse_never_rematches_sampled_blocks():
+    """Acceptance: with τ one above every true support nothing early-exits
+    and nothing prunes, so the escalation walks the full schedule for
+    every pattern — and the counters prove each sampled block is replayed,
+    never re-matched.  All-escalate also means the settled-set CI width
+    has no samples: `ci_width_mean` must be None (JSON null), not NaN."""
+    from repro.core.sampled import evaluate_level_sampled
+
+    g, dev_g, cfg, pats, plan, exact = _level_fixture("mis", 0.5)
+    taus = [o.support + 1 for o in exact]
+    m = -(-g.n // cfg.match.root_block)
+    counters = {}
+    outs, timed, tel = evaluate_level_sampled(
+        g, dev_g, pats, taus, "mis", cfg.match, sample=plan.sample,
+        confidence=cfg.confidence, escalate=True, max_batch=64,
+        sample_rounds=1, counters=counters)
+    assert not timed
+    s = tel.sampled
+    assert s["escalated"] == len(pats) and s["pruned"] == 0
+    assert s["ci_width_mean"] is None
+    assert "NaN" not in json.dumps(s, allow_nan=False)
+    # every pattern escalated ⇒ exact outcomes, bit-identical to complete
+    for o, e in zip(outs, exact):
+        assert not o.estimated
+        assert (o.support, o.embeddings_found, o.overflowed) \
+            == (e.support, e.embeddings_found, e.overflowed)
+    # one k=2 group (max_batch ≥ P): the full walk visits every block
+    # exactly once per group — sampled positions via the update-only
+    # replay step, the rest via real match steps
+    n_groups = -(-len(pats) // 64)
+    assert counters["replay_blocks"] == n_groups * s["n_sample"]
+    assert counters["match_blocks"] == n_groups * (m - s["n_sample"])
+
+
+def test_adaptive_rounds_grow_coverage_until_undecided_stops_shrinking():
+    """Mixed τ: half the patterns sit far below an astronomic τ (the CI
+    prunes them round 1), the rest straddle τ (stay undecided) — so the
+    sampler must draw a second geometric round before handing the rest to
+    escalation.  Escalated outcomes stay bit-identical to complete."""
+    from repro.core.sampled import evaluate_level_sampled
+
+    g, dev_g, cfg, pats, plan, exact = _level_fixture("mis", 0.5)
+    taus = [10 ** 6 if i % 2 == 0 else exact[i].support + 1
+            for i in range(len(pats))]
+    outs, timed, tel = evaluate_level_sampled(
+        g, dev_g, pats, taus, "mis", cfg.match, sample=plan.sample,
+        confidence=cfg.confidence, escalate=True, max_batch=64,
+        sample_rounds=3)
+    assert not timed
+    s = tel.sampled
+    assert s["pruned"] >= 1 and s["escalated"] >= 1
+    # round 1 pruned the easy half and left undecided mass → a further
+    # round ran, and coverage grew beyond the plan's round-0 draw
+    assert s["rounds"] >= 2
+    assert s["n_sample"] > plan.sample["n_sample"]
+    assert s["ci_width_mean"] is not None and s["ci_width_mean"] >= 0.0
+    for i, (o, e) in enumerate(zip(outs, exact)):
+        if taus[i] == 10 ** 6:
+            assert o.estimated and not o.frequent
+        else:
+            assert not o.estimated
+            assert (o.support, o.embeddings_found) \
+                == (e.support, e.embeddings_found)

@@ -1,0 +1,140 @@
+"""Auto-planned sampled levels — pricing fires for real, and survives kills.
+
+The ISSUE 10 acceptance property: when the *auto* planner prices a level
+onto the sampled plane (rather than the user forcing it), the run's
+frequent set and supports stay bit-identical to the forced-batched
+oracle across every batchable metric — including a kill at any snapshot
+point, after which the resumed session replays the recorded pricing
+decision, sample rounds, and within-level replans verbatim instead of
+re-deriving them.
+
+The cost model is pinned via a schema-3 calibration file with a high
+dispatch overhead: on these tiny graphs that makes the batched row beat
+sequential (amortized dispatch), which puts the sampled row on the
+table; τ = 6 at ``sample_fraction = 0.5`` then clears the hidden-mass
+bound (≈ 4.3) and the prior escalation mass prices the sample in.
+"""
+import json
+
+import pytest
+
+from repro.core import MatchConfig, MiningConfig, mine
+from repro.core.planner import CALIBRATION_ENV
+from repro.data.synthetic import rmat_graph
+from repro.runtime import MiningSession
+
+from tests.runtime.test_session import _killed_session
+
+METRICS = ("mis", "mis_luby", "mni", "frac")
+
+# auto-only per-level diagnostics, absent from forced-batched runs
+_AUTO_KEYS = ("plan", "sampled", "block_peaks", "replans")
+
+
+def _graph():
+    return rmat_graph(64, 320, n_labels=2, seed=3, undirected=True)
+
+
+def _cfg(metric, execution, **kw):
+    kw.setdefault("sigma", 6)
+    kw.setdefault("lam", 1.0)
+    kw.setdefault("max_pattern_size", 3)
+    kw.setdefault("sample_fraction", 0.5)
+    kw.setdefault("match", MatchConfig(cap=512, root_block=8, chunk=16,
+                                       max_chunks=4, bisect_iters=7))
+    return MiningConfig(metric=metric, execution=execution, **kw)
+
+
+@pytest.fixture
+def priced(tmp_path, monkeypatch):
+    """Pin a cost model under which batched (and thus sampled) can win."""
+    cal = tmp_path / "calibration.json"
+    cal.write_text(json.dumps({
+        "schema": 3, "dispatch_overhead_s": 0.05, "lane_time_s": 2e-9,
+        "row_time_s": 4e-6, "vmap_factor": 1.15,
+        "escalation_fraction": 0.25}))
+    monkeypatch.setenv(CALIBRATION_ENV, str(cal))
+
+
+def _oracle_norm(res):
+    """Plane-invariant result view: frequent set, full stats, per-level
+    counts minus wall clock, dispatch totals (sample + escalation passes
+    split differently) and the auto-only diagnostics."""
+    return dict(
+        frequent=[(p.key(), s) for p, s in res.frequent],
+        stats=[(st.pattern.key(), st.support, st.tau, st.frequent,
+                st.embeddings_found, st.overflowed, st.blocks_run,
+                st.max_count, st.estimated) for st in res.stats],
+        searched=res.searched,
+        per_level={
+            lvl: {k: v for k, v in st.items()
+                  if k not in ("wall_s", "dispatches") + _AUTO_KEYS}
+            for lvl, st in res.per_level.items()},
+        timed_out=res.timed_out,
+    )
+
+
+def _replay_norm(res):
+    """Resume-identity view: everything except wall clock — the recorded
+    pricing decision, draw, adaptive rounds, and replan counts included."""
+    return dict(
+        frequent=[(p.key(), s) for p, s in res.frequent],
+        stats=[(st.pattern.key(), st.support, st.tau, st.frequent,
+                st.embeddings_found, st.overflowed, st.blocks_run,
+                st.max_count, st.estimated) for st in res.stats],
+        searched=res.searched,
+        per_level={k: {kk: vv for kk, vv in v.items() if kk != "wall_s"}
+                   for k, v in res.per_level.items()},
+        timed_out=res.timed_out,
+    )
+
+
+def _sampled_levels(res):
+    return [lvl for lvl, st in res.per_level.items()
+            if (st.get("plan") or {}).get("plane") == "sampled"]
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_auto_selects_sampled_and_matches_forced_batched(priced, metric):
+    g = _graph()
+    res = mine(g, _cfg(metric, "auto"))
+    picked = _sampled_levels(res)
+    assert picked, "pricing never chose the sampled plane"
+    for lvl in picked:
+        pr = res.per_level[lvl]["plan"]["pricing"]
+        assert pr["chosen"] == "sampled"
+        assert pr["sampled_s"] < pr["margin"] * pr["batched_s"]
+        assert pr["tau_min"] > pr["hidden_bound"]
+        assert res.per_level[lvl]["sampled"] is not None
+    ref = mine(g, _cfg(metric, "batched"))
+    assert _oracle_norm(res) == _oracle_norm(ref)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_auto_sampled_resume_bit_identical_at_every_snapshot(
+        priced, tmp_path, metric):
+    g = _graph()
+    cfg = _cfg(metric, "auto")
+    ref = mine(g, cfg)
+    assert _sampled_levels(ref), "pricing never chose the sampled plane"
+    oracle = _oracle_norm(mine(g, _cfg(metric, "batched")))
+    assert _oracle_norm(ref) == oracle
+
+    base = MiningSession(g, cfg, tmp_path / "base", checkpoint_every=1,
+                         keep_last=100)
+    assert _replay_norm(base.run()) == _replay_norm(ref)
+    total = base.snapshots_written
+    assert total >= 2
+
+    for kill_at in range(1, total + 1):
+        d = tmp_path / f"kill{kill_at}"
+        fired = _killed_session(g, cfg, d, kill_at,
+                                checkpoint_every=1, keep_last=100)
+        assert fired, f"bomb at snapshot {kill_at} never fired"
+        resumed = MiningSession(g, cfg, d, checkpoint_every=1,
+                                keep_last=100).run()
+        # the full per-level record — pricing decision, draw, rounds,
+        # replans — replays verbatim, and the oracle equality holds
+        assert _replay_norm(resumed) == _replay_norm(ref), \
+            f"kill_at={kill_at}"
+        assert _oracle_norm(resumed) == oracle, f"kill_at={kill_at}"
